@@ -1,0 +1,59 @@
+"""Paper Fig. 11 + Fig. 21 + Fig. 22: control-overhead analytics.
+
+Reproduces the paper's own analytical model: how many stream commands a
+Von-Neumann control core must issue to express each workload's access
+pattern under capabilities V / R / RR / RI, the resulting mean stream
+length, and control instructions per inner-loop iteration.
+
+Claims validated (also enforced in tests/test_streams.py):
+  * solver at RI capability: 8 total commands vs 3+5n at RR (Fig. 11)
+  * RI always <= 1 control inst/iter on FGOP workloads (Fig. 22)
+  * inductive capability unlocks long streams on FGOP patterns (Fig. 21)
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.core.streams import (average_stream_length, command_count,
+                                commands_per_iteration, inductive, rect)
+
+CAPS = ["V", "R", "RR", "RI"]
+
+
+def workload_patterns(n: int):
+    """Dominant access pattern per workload (matrix size / data size n)."""
+    return {
+        # triangular walk: inner trip shrinks by 1 per outer iteration
+        "cholesky": inductive(n, n, -1, outer_stride=n + 1),
+        "solver": inductive(n, n - 1, -1, outer_stride=n + 1),
+        "qr": inductive(n, n, -1, outer_stride=n + 1),
+        "svd": inductive(n, n, -1, outer_stride=n + 1),
+        # rectangular workloads
+        "gemm": rect(n, n),
+        "fft": rect(n),
+        "fir": rect(n, 16),
+    }
+
+
+def run() -> None:
+    header("Fig. 11: solver stream commands (RI vs decomposed RR)")
+    for n in (12, 16, 24, 32):
+        pats = [inductive(n, n - 1, -1, outer_stride=n + 1, name="a"),
+                rect(n, name="b"),
+                inductive(n, n - 1, -1, name="x-reuse")]
+        ri = sum(command_count(p, "RI") for p in pats) + 5
+        rr = sum(command_count(p, "RR") for p in pats) + 5
+        emit(f"fig11/solver/n{n}/RI_cmds", ri, f"paper=8")
+        emit(f"fig11/solver/n{n}/RR_cmds", rr, f"paper=3+5n={3 + 5 * n}")
+
+    header("Fig. 21: mean stream length by capability")
+    for name, pat in workload_patterns(32).items():
+        for cap in CAPS:
+            emit(f"fig21/{name}/{cap}", average_stream_length(pat, cap),
+                 "iters-per-command")
+
+    header("Fig. 22: control insts per inner-loop iteration")
+    for name, pat in workload_patterns(32).items():
+        for cap in CAPS:
+            v = commands_per_iteration(pat, cap)
+            emit(f"fig22/{name}/{cap}", v,
+                 "OK(<1)" if (cap != "RI" or v <= 1.0) else "VIOLATION")

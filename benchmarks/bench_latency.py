@@ -1,0 +1,90 @@
+"""Paper Fig. 16 analog: latency-optimized kernels at the paper's data
+sizes (12..32 matrices; 64..1024 FFT), FGOP-fused formulation vs the
+unfused library/naive baseline on the same substrate.
+
+The paper compares REVEL vs DSP/OOO hardware; on a single fixed substrate
+(CPU-XLA) the measurable quantity is formulation-vs-formulation — fused
+ordered-dependence code vs library calls — plus the Pallas kernels'
+*structural* latency model from tests.  TPU wall-clock claims live in the
+roofline analysis, not here (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_mechanisms import chol_fused, solve_fused
+from benchmarks.common import emit, header, timeit
+from repro.kernels import ops
+
+
+def _spd(rng, n, batch=1):
+    a = rng.standard_normal((batch, n, n)).astype(np.float32)
+    return a @ np.swapaxes(a, -1, -2) + n * np.eye(n, dtype=np.float32)
+
+
+def run() -> None:
+    rng = np.random.default_rng(7)
+    sizes = (12, 16, 24, 32)
+
+    header("Fig. 16: cholesky latency (fused vs library)")
+    for n in sizes:
+        a1 = jnp.asarray(_spd(rng, n)[0])
+        t_fused = timeit(jax.jit(chol_fused), a1)
+        t_lib = timeit(jax.jit(jnp.linalg.cholesky), a1)
+        emit(f"fig16/cholesky/n{n}/fused", t_fused,
+             f"lib={t_lib:.1f}us")
+
+    header("Fig. 16: solver latency")
+    for n in sizes:
+        l = jnp.asarray(np.linalg.cholesky(_spd(rng, n)[0]))
+        b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        t_fused = timeit(jax.jit(solve_fused), l, b)
+        t_lib = timeit(jax.jit(functools.partial(
+            jax.scipy.linalg.solve_triangular, lower=True)), l, b)
+        emit(f"fig16/solver/n{n}/fused", t_fused, f"lib={t_lib:.1f}us")
+
+    header("Fig. 16: QR latency (fused householder vs library)")
+    for n in sizes:
+        a = jnp.asarray(rng.standard_normal((1, n, n)).astype(np.float32))
+        t_fused = timeit(jax.jit(lambda a_: ops.qr(a_, backend="xla")), a)
+        t_lib = timeit(jax.jit(jnp.linalg.qr), a[0])
+        emit(f"fig16/qr/n{n}/fused", t_fused, f"lib={t_lib:.1f}us")
+
+    header("Fig. 16: SVD latency (one-sided jacobi vs library)")
+    for n in (12, 16, 24):
+        a = jnp.asarray(rng.standard_normal((1, n, n)).astype(np.float32))
+        t_fused = timeit(
+            jax.jit(lambda a_: ops.svd(a_, backend="xla")), a, reps=5)
+        t_lib = timeit(jax.jit(
+            functools.partial(jnp.linalg.svd, compute_uv=True)), a[0],
+            reps=5)
+        emit(f"fig16/svd/n{n}/fused", t_fused, f"lib={t_lib:.1f}us")
+
+    header("Fig. 16: GEMM latency (paper sizes 12/24/48 x 16 x 64)")
+    for m in (12, 24, 48):
+        x = jnp.asarray(rng.standard_normal((m, 16)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+        t = timeit(jax.jit(lambda x_, y_: ops.gemm(x_, y_,
+                                                   backend="xla")), x, y)
+        emit(f"fig16/gemm/{m}x16x64", t, "")
+
+    header("Fig. 16: FIR latency (sizes 12..32 taps, 2048 signal)")
+    for m in (13, 17, 25, 31):
+        x = jnp.asarray(rng.standard_normal(2048).astype(np.float32))
+        h = rng.standard_normal(m).astype(np.float32)
+        h = jnp.asarray((h + h[::-1]) / 2)
+        t = timeit(jax.jit(lambda x_, h_: ops.fir(x_, h_,
+                                                  backend="xla")), x, h)
+        emit(f"fig16/fir/m{m}", t, "")
+
+    header("Fig. 16: FFT latency (paper sizes 64/128/1024)")
+    for n in (64, 128, 1024):
+        xr = jnp.asarray(rng.standard_normal((1, n)).astype(np.float32))
+        xi = jnp.asarray(rng.standard_normal((1, n)).astype(np.float32))
+        t = timeit(jax.jit(lambda r, i: ops.fft(r, i, backend="xla")),
+                   xr, xi)
+        emit(f"fig16/fft/n{n}", t, "")

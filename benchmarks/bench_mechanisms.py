@@ -1,0 +1,190 @@
+"""Paper Fig. 19 analog: incremental speedup of each mechanism, measured.
+
+The paper stacks: +inductive, +fine-grain-deps, +heterogeneous fabric,
++masking.  On the XLA/CPU substrate the measurable analogs are:
+
+  dispatch  — every region command issued separately (3 dispatches per
+              outer iteration; the task-parallel / no-stream baseline
+              whose synchronization+dispatch cost the paper measures)
+  streamed  — one program, control amortized in time (the vector-stream
+              command model: the whole factorization is ONE command
+              sequence executed by the 'lane', regions fused so ordered
+              dependences never leave registers)
+  lanes     — + control amortized in space: 8 data-parallel lanes under
+              one control program (vmap = the lane bitmask), per-matrix us
+  library   — jnp.linalg / jax.scipy (the 'MKL' line)
+
+Correctness of the fused formulations is asserted against the library
+before timing.  Wall-times are CPU-XLA and used for *relative* mechanism
+comparisons only (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, timeit
+
+LANES = 8
+
+
+# ---------------- cholesky variants ----------------
+
+def chol_fused(a):
+    """Fused point/vector/matrix regions; one scan over k (FIFO=carry)."""
+    n = a.shape[-1]
+    idx = jnp.arange(n)
+
+    def step(carry, k):
+        a_, l_ = carry
+        col = jax.lax.dynamic_slice_in_dim(a_, k, 1, axis=1)[:, 0]
+        akk = jax.lax.dynamic_slice_in_dim(col, k, 1)[0]
+        pivot = jnp.sqrt(jnp.maximum(akk, 1e-30))      # point region
+        inva = 1.0 / pivot
+        below = idx > k
+        lcol = jnp.where(below, col * inva, 0.0)       # vector region
+        lcol = jnp.where(idx == k, pivot, lcol)
+        lm = jnp.where(below, lcol, 0.0)
+        a_ = a_ - jnp.outer(lm, lm)                    # matrix region
+        l_ = jax.lax.dynamic_update_slice_in_dim(
+            l_, lcol[:, None], k, axis=1)
+        return (a_, l_), None
+
+    (_, l), _ = jax.lax.scan(step, (a, jnp.zeros_like(a)), idx)
+    return l
+
+
+# separate per-region programs (the dispatch-per-command baseline)
+@jax.jit
+def _point(a_, k):
+    akk = jax.lax.dynamic_slice(a_, (k, k), (1, 1))[0, 0]
+    pivot = jnp.sqrt(jnp.maximum(akk, 1e-30))
+    return pivot, 1.0 / pivot
+
+
+@jax.jit
+def _vector(a_, l_, k, pivot, inva):
+    n = a_.shape[-1]
+    idx = jnp.arange(n)
+    col = jax.lax.dynamic_slice_in_dim(a_, k, 1, axis=1)[:, 0]
+    lcol = jnp.where(idx > k, col * inva, 0.0)
+    lcol = jnp.where(idx == k, pivot, lcol)
+    return jax.lax.dynamic_update_slice_in_dim(l_, lcol[:, None], k,
+                                               axis=1), lcol
+
+
+@jax.jit
+def _matrix(a_, lcol, k):
+    idx = jnp.arange(a_.shape[-1])
+    lm = jnp.where(idx > k, lcol, 0.0)
+    return a_ - jnp.outer(lm, lm)
+
+
+def chol_dispatch(a):
+    n = a.shape[-1]
+    l = jnp.zeros_like(a)
+    for k in range(n):                      # host control loop
+        kk = jnp.asarray(k)
+        pivot, inva = _point(a, kk)         # command 1
+        l, lcol = _vector(a, l, kk, pivot, inva)   # command 2
+        a = _matrix(a, lcol, kk)            # command 3
+    return l
+
+
+# ---------------- solver (forward substitution) variants ----------------
+
+def solve_fused(l, b):
+    n = l.shape[-1]
+    idx = jnp.arange(n)
+
+    def step(carry, j):
+        b_ = carry
+        ljj = jax.lax.dynamic_slice(l, (j, j), (1, 1))[0, 0]
+        bj = jax.lax.dynamic_slice_in_dim(b_, j, 1)[0]
+        xj = bj / ljj                                   # divide region
+        col = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=1)[:, 0]
+        b_ = jnp.where(idx > j, b_ - xj * col, b_)      # axpy region
+        b_ = jnp.where(idx == j, xj, b_)
+        return b_, None
+
+    x, _ = jax.lax.scan(step, b, idx)
+    return x
+
+
+@jax.jit
+def _divide(l, b_, j):
+    ljj = jax.lax.dynamic_slice(l, (j, j), (1, 1))[0, 0]
+    bj = jax.lax.dynamic_slice_in_dim(b_, j, 1)[0]
+    return bj / ljj
+
+
+@jax.jit
+def _axpy(l, b_, xj, j):
+    idx = jnp.arange(l.shape[-1])
+    col = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=1)[:, 0]
+    b_ = jnp.where(idx > j, b_ - xj * col, b_)
+    return jnp.where(idx == j, xj, b_)
+
+
+def solve_dispatch(l, b):
+    for j in range(l.shape[-1]):
+        jj = jnp.asarray(j)
+        xj = _divide(l, b, jj)
+        b = _axpy(l, b, xj, jj)
+    return b
+
+
+# ---------------- harness ----------------
+
+def _spd(rng, n, batch=None):
+    shape = (batch, n, n) if batch else (n, n)
+    a = rng.standard_normal(shape).astype(np.float32)
+    return a @ np.swapaxes(a, -1, -2) + n * np.eye(n, dtype=np.float32)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for n in (16, 32):
+        header(f"Fig. 19 mechanisms: cholesky n={n}")
+        a = jnp.asarray(_spd(rng, n))
+        want = np.linalg.cholesky(np.asarray(a))
+        got = np.asarray(jax.jit(chol_fused)(a))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+        t_disp = timeit(chol_dispatch, a, reps=5, warmup=1)
+        t_stream = timeit(jax.jit(chol_fused), a)
+        ab = jnp.asarray(_spd(rng, n, LANES))
+        lanes_fn = jax.jit(jax.vmap(chol_fused))
+        t_lanes = timeit(lanes_fn, ab) / LANES
+        t_lib = timeit(jax.jit(jnp.linalg.cholesky), a)
+        emit(f"fig19/cholesky{n}/dispatch", t_disp, "1.0x")
+        emit(f"fig19/cholesky{n}/streamed", t_stream,
+             f"{t_disp / t_stream:.1f}x")
+        emit(f"fig19/cholesky{n}/lanes", t_lanes,
+             f"{t_disp / t_lanes:.1f}x")
+        emit(f"fig19/cholesky{n}/library", t_lib,
+             f"{t_disp / t_lib:.1f}x")
+
+        header(f"Fig. 19 mechanisms: solver n={n}")
+        lmat = jnp.asarray(want)
+        b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        import scipy.linalg  # noqa: F401  (via jax.scipy below)
+        xs = np.asarray(jax.jit(solve_fused)(lmat, b))
+        ref = np.linalg.solve(want, np.asarray(b))
+        np.testing.assert_allclose(xs, ref, rtol=2e-3, atol=1e-5)
+
+        t_disp = timeit(solve_dispatch, lmat, b, reps=5, warmup=1)
+        t_stream = timeit(jax.jit(solve_fused), lmat, b)
+        lb = jnp.asarray(rng.standard_normal((LANES, n)).astype(np.float32))
+        lmats = jnp.broadcast_to(lmat, (LANES, n, n))
+        t_lanes = timeit(jax.jit(jax.vmap(solve_fused)), lmats, lb) / LANES
+        t_lib = timeit(jax.jit(functools.partial(
+            jax.scipy.linalg.solve_triangular, lower=True)), lmat, b)
+        emit(f"fig19/solver{n}/dispatch", t_disp, "1.0x")
+        emit(f"fig19/solver{n}/streamed", t_stream,
+             f"{t_disp / t_stream:.1f}x")
+        emit(f"fig19/solver{n}/lanes", t_lanes, f"{t_disp / t_lanes:.1f}x")
+        emit(f"fig19/solver{n}/library", t_lib, f"{t_disp / t_lib:.1f}x")

@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.jsonl (written by repro.launch.dryrun) and emits the
+three-term roofline per (arch x shape x mesh): compute / memory /
+collective seconds, dominant bottleneck, useful-FLOPs ratio, projected
+MFU.  Single-pod rows are the §Roofline table; pod rows prove DCN-axis
+sharding."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, header
+
+RESULTS = os.environ.get("DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "dryrun_results.jsonl"))
+
+
+def run() -> None:
+    try:
+        recs = [json.loads(l) for l in open(RESULTS) if l.strip()]
+    except FileNotFoundError:
+        header(f"roofline: no dry-run artifact at {RESULTS} — run "
+               "`python -m repro.launch.dryrun --all` first")
+        return
+    ok = [r for r in recs if r.get("status") == "ok"]
+    header(f"Roofline ({len(ok)} compiled cells; "
+           f"{sum(r.get('status') == 'skipped' for r in recs)} skipped)")
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        rl = r["roofline"]
+        name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        t_star = rl["step_time"]
+        emit(name, t_star * 1e6,
+             f"bottleneck={rl['bottleneck']}"
+             f";t_comp={rl['t_compute']:.3e}"
+             f";t_mem={rl['t_memory']:.3e}"
+             f";t_coll={rl['t_collective']:.3e}"
+             f";useful={rl['useful_ratio']:.2f}"
+             f";mfu={rl['mfu']:.3f}"
+             f";GiB/dev={r['memory']['per_device_total'] / 2**30:.1f}")

@@ -1,0 +1,51 @@
+"""Paper Fig. 17 analog: throughput-optimized kernels — each lane runs one
+problem data-parallel (the paper's throughput setting), so the metric is
+problems/second at batch = 8 lanes x k.
+
+Implemented as vmap over the fused formulations: one control program, all
+lanes advance under the same stream schedule (vector-stream control)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_mechanisms import chol_fused, solve_fused
+from benchmarks.common import emit, header, timeit
+from repro.kernels import ops
+
+BATCH = 64
+
+
+def run() -> None:
+    rng = np.random.default_rng(11)
+    for n in (12, 16, 24, 32):
+        header(f"Fig. 17 throughput n={n} (batch {BATCH})")
+        a = rng.standard_normal((BATCH, n, n)).astype(np.float32)
+        spd = jnp.asarray(a @ a.swapaxes(-1, -2)
+                          + n * np.eye(n, dtype=np.float32))
+        t = timeit(jax.jit(jax.vmap(chol_fused)), spd, reps=10)
+        emit(f"fig17/cholesky/n{n}", t / BATCH,
+             f"{1e6 / (t / BATCH):.0f} problems/s")
+
+        lmat = jnp.asarray(np.linalg.cholesky(np.asarray(spd)))
+        b = jnp.asarray(rng.standard_normal((BATCH, n)).astype(np.float32))
+        t = timeit(jax.jit(jax.vmap(solve_fused)), lmat, b, reps=10)
+        emit(f"fig17/solver/n{n}", t / BATCH,
+             f"{1e6 / (t / BATCH):.0f} problems/s")
+
+        aa = jnp.asarray(rng.standard_normal((BATCH, n, n))
+                         .astype(np.float32))
+        t = timeit(jax.jit(lambda a_: ops.qr(a_, backend="xla")), aa,
+                   reps=5)
+        emit(f"fig17/qr/n{n}", t / BATCH,
+             f"{1e6 / (t / BATCH):.0f} problems/s")
+
+    header(f"Fig. 17 throughput: FFT batch {BATCH}")
+    for n in (64, 128, 1024):
+        xr = jnp.asarray(rng.standard_normal((BATCH, n)).astype(np.float32))
+        xi = jnp.asarray(rng.standard_normal((BATCH, n)).astype(np.float32))
+        t = timeit(jax.jit(lambda r, i: ops.fft(r, i, backend="xla")),
+                   xr, xi, reps=10)
+        emit(f"fig17/fft/n{n}", t / BATCH,
+             f"{1e6 / (t / BATCH):.0f} problems/s")

@@ -1,0 +1,33 @@
+"""Shared benchmark plumbing: wall-clock timing of jitted callables and the
+``name,us_per_call,derived`` CSV contract used by benchmarks.run."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn, *args, reps: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def header(title: str) -> None:
+    print(f"# --- {title} ---", flush=True)

@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  fig11/21/22  control-overhead analytics   bench_control_overhead
+  fig2         masking utilization          bench_masking_util
+  fig19        mechanism stack (timed)      bench_mechanisms
+  fig16        latency-optimized kernels    bench_latency
+  fig17        throughput-optimized         bench_throughput
+  roofline     3-term table from dry-run    bench_roofline
+
+Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_control_overhead, bench_latency,
+                        bench_masking_util, bench_mechanisms,
+                        bench_roofline, bench_throughput)
+
+MODULES = [
+    ("control_overhead", bench_control_overhead),
+    ("masking_util", bench_masking_util),
+    ("mechanisms", bench_mechanisms),
+    ("latency", bench_latency),
+    ("throughput", bench_throughput),
+    ("roofline", bench_roofline),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod.run()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

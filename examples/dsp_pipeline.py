@@ -1,0 +1,116 @@
+"""Paper-faithful example: a 4G/5G-style MIMO receiver equalization chain
+built from the seven DSP kernels (paper Fig. 4).
+
+  channel estimate -> Cholesky(H^H H + sigma I) -> triangular solve
+  (LMMSE equalizer), plus FFT demodulation and FIR filtering — the
+  exact kernel set the paper targets, on DSP-sized matrices (12..32).
+
+Run:  PYTHONPATH=src python examples/dsp_pipeline.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+ANTENNAS = 16      # matrix size n (paper: 12-32 antennas/beams)
+SUBCARRIERS = 64   # FFT size
+BATCH = 8          # OFDM symbols processed per call (lanes)
+
+
+def make_channel(rng, b, n):
+    hr = rng.standard_normal((b, n, n)).astype(np.float32)
+    hi = rng.standard_normal((b, n, n)).astype(np.float32)
+    return hr, hi
+
+
+@jax.jit
+def lmmse_equalize(hr, hi, yr, yi, sigma2=0.1):
+    """LMMSE: x = (H^H H + s I)^-1 H^H y, via Cholesky + two trisolves.
+    Complex arithmetic expanded to real (TPU has no complex MXU path)."""
+    n = hr.shape[-1]
+    # G = H^H H + sigma I  (hermitian -> real SPD in expanded form)
+    gr = jnp.einsum("bij,bik->bjk", hr, hr) \
+        + jnp.einsum("bij,bik->bjk", hi, hi) \
+        + sigma2 * jnp.eye(n)
+    gi = jnp.einsum("bij,bik->bjk", hr, hi) \
+        - jnp.einsum("bij,bik->bjk", hi, hr)
+    # expanded real SPD:  [[Gr, -Gi], [Gi, Gr]]
+    g = jnp.concatenate([
+        jnp.concatenate([gr, -gi], axis=-1),
+        jnp.concatenate([gi, gr], axis=-1)], axis=-2)
+    # rhs = H^H y, expanded
+    br = jnp.einsum("bij,bi->bj", hr, yr) + jnp.einsum("bij,bi->bj", hi, yi)
+    bi = jnp.einsum("bij,bi->bj", hr, yi) - jnp.einsum("bij,bi->bj", hi, yr)
+    rhs = jnp.concatenate([br, bi], axis=-1)[..., None]
+    # FGOP kernels: cholesky + forward/backward substitution
+    l = ops.cholesky(g)
+    z = ops.trisolve(l, rhs, lower=True)
+    x = ops.trisolve(jnp.swapaxes(l, -1, -2), z, lower=False)[..., 0]
+    return x[:, :n], x[:, n:]
+
+
+@jax.jit
+def ofdm_demod(sym_r, sym_i):
+    """FFT demodulation of an OFDM symbol batch."""
+    return ops.fft(sym_r, sym_i)
+
+
+@jax.jit
+def channel_filter(x, taps):
+    return ops.fir(x, taps)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print(f"MIMO LMMSE chain: {ANTENNAS} antennas, batch {BATCH}")
+
+    # --- channel + signal ---
+    hr, hi = make_channel(rng, BATCH, ANTENNAS)
+    x_true_r = rng.standard_normal((BATCH, ANTENNAS)).astype(np.float32)
+    x_true_i = rng.standard_normal((BATCH, ANTENNAS)).astype(np.float32)
+    yr = np.einsum("bij,bj->bi", hr, x_true_r) \
+        - np.einsum("bij,bj->bi", hi, x_true_i)
+    yi = np.einsum("bij,bj->bi", hr, x_true_i) \
+        + np.einsum("bij,bj->bi", hi, x_true_r)
+
+    # --- equalize (Cholesky + solves: the FGOP kernels) ---
+    t0 = time.perf_counter()
+    xr, xi = lmmse_equalize(jnp.asarray(hr), jnp.asarray(hi),
+                            jnp.asarray(yr), jnp.asarray(yi))
+    jax.block_until_ready(xr)
+    dt = time.perf_counter() - t0
+    nmse = (np.linalg.norm(np.asarray(xr) - x_true_r) ** 2
+            + np.linalg.norm(np.asarray(xi) - x_true_i) ** 2) \
+        / (np.linalg.norm(x_true_r) ** 2 + np.linalg.norm(x_true_i) ** 2)
+    print(f"  equalized {BATCH} symbols in {dt * 1e3:.2f} ms "
+          f"(incl. compile), NMSE={nmse:.3e}")
+
+    # --- OFDM demod (FFT kernel) ---
+    sym = rng.standard_normal((BATCH, SUBCARRIERS)).astype(np.float32)
+    fre, fim = ofdm_demod(jnp.asarray(sym), jnp.zeros_like(jnp.asarray(sym)))
+    ref = np.fft.fft(sym, axis=-1)
+    print(f"  FFT demod err: "
+          f"{np.abs(np.asarray(fre) - ref.real).max():.2e}")
+
+    # --- front-end FIR (centro-symmetric taps) ---
+    taps = rng.standard_normal(31).astype(np.float32)
+    taps = (taps + taps[::-1]) / 2
+    sig = rng.standard_normal(2048).astype(np.float32)
+    y = channel_filter(jnp.asarray(sig), jnp.asarray(taps))
+    ref = np.convolve(sig, taps[::-1], mode="valid")
+    print(f"  FIR err: {np.abs(np.asarray(y) - ref).max():.2e}")
+
+    # --- SVD-based noise reduction (paper: SVD for noise suppression) ---
+    a = rng.standard_normal((1, 16, 12)).astype(np.float32)
+    u, s, v = ops.svd(jnp.asarray(a), backend="xla")
+    want = np.linalg.svd(a[0], compute_uv=False)
+    print(f"  SVD sigma err: "
+          f"{np.abs(np.sort(np.asarray(s)[0])[::-1] - want).max():.2e}")
+    print("pipeline OK.")
+
+
+if __name__ == "__main__":
+    main()

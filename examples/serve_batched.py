@@ -1,0 +1,46 @@
+"""Serving example: batched request decode through the DecodeEngine
+(continuous-batching-lite: fixed slot pool, padded slots masked).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch phi4-mini-3.8b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_smoke
+from repro.models import transformer as T
+from repro.serve.engine import DecodeEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pool", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)   # reduced config: CPU-serveable
+    params = T.init_params(jax.random.key(0), cfg)
+    engine = DecodeEngine(cfg, params, batch=args.pool, max_len=128,
+                          eos_id=1)
+
+    prompts = [[2 + i, 7, 11, (13 * i) % cfg.vocab]
+               for i in range(args.requests)]
+    for p in prompts:
+        engine.submit(Request(prompt=p, max_new=args.max_new))
+
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total_new = sum(len(r.out) for r in done)
+    print(f"arch={cfg.name} pool={args.pool}")
+    for i, r in enumerate(done):
+        print(f"  req{i}: prompt={r.prompt} -> {r.out}")
+    print(f"\n{len(done)} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""FGOP core abstractions: stream IR, masking, ordered deps, criticality."""
+from repro.core.streams import (  # noqa: F401
+    StreamDescriptor,
+    StreamDim,
+    rect,
+    inductive,
+    command_count,
+    commands_per_iteration,
+    average_stream_length,
+)
+from repro.core.masking import (  # noqa: F401
+    lane_mask,
+    tail_mask,
+    tri_mask,
+    masked_fill,
+    vector_utilization,
+)
+from repro.core.dependence import (  # noqa: F401
+    Region,
+    OrderedDep,
+    RegionGraph,
+    fuse_scan,
+)
+from repro.core.criticality import (  # noqa: F401
+    RegionCost,
+    plan_split,
+)

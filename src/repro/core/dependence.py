@@ -1,0 +1,89 @@
+"""Ordered dependences between concurrent regions (paper §4 Feature 1-2).
+
+REVEL expresses a kernel as multiple dataflow *regions* connected by FIFOs
+with production:consumption rate annotations.  The TPU realization: regions
+are fused into one `lax.scan` (or one Pallas kernel); the FIFO is the scan
+carry; the rate annotation becomes how the carry is produced/consumed per
+step.  This module gives that structure a name so kernels and models are
+written as explicit FGOP region graphs, and so tests can check rate
+consistency *before* tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = ["Region", "OrderedDep", "RegionGraph", "fuse_scan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One computation region (paper: point / vector / matrix).
+
+    ``critical`` marks the region that should own the wide datapath
+    (paper Feature 5); non-critical regions hold sqrt/div-style point ops.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    critical: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class OrderedDep:
+    """producer -> consumer channel with (possibly inductive) rates.
+
+    production:consumption = prod_rate : cons_rate, each optionally
+    stretched per outer iteration (paper F2's s_p / s_c).
+    """
+
+    producer: str
+    consumer: str
+    prod_rate: Fraction = Fraction(1)
+    cons_rate: Fraction = Fraction(1)
+    prod_stretch: Fraction = Fraction(0)
+    cons_stretch: Fraction = Fraction(0)
+
+    def consumptions_at(self, k: int) -> int:
+        """How many times the value produced at outer-iteration k is read."""
+        return max(0, int(self.cons_rate + self.cons_stretch * k))
+
+
+@dataclasses.dataclass
+class RegionGraph:
+    """A static FGOP region graph; validates then fuses to one scan body."""
+
+    regions: Sequence[Region]
+    deps: Sequence[OrderedDep]
+
+    def __post_init__(self):
+        names = {r.name for r in self.regions}
+        for d in self.deps:
+            if d.producer not in names or d.consumer not in names:
+                raise ValueError(f"dep {d} references unknown region")
+        if not any(r.critical for r in self.regions):
+            raise ValueError("region graph needs >=1 critical region")
+
+    @property
+    def critical(self) -> Region:
+        return next(r for r in self.regions if r.critical)
+
+    def total_consumptions(self, dep: OrderedDep, n_outer: int) -> int:
+        return sum(dep.consumptions_at(k) for k in range(n_outer))
+
+
+def fuse_scan(step_fn: Callable, init_carry, xs=None, length=None,
+              unroll: int = 1):
+    """Fuse ordered-dependent regions into one scan.
+
+    The paper's key performance move is that the point->vector->matrix
+    dependence chain never round-trips through memory or synchronization;
+    here the carry (the FIFO contents) stays in registers/VMEM across the
+    fused body.  Thin wrapper over lax.scan kept as the single fusion
+    entry-point so remat policy / unroll can be tuned in one place.
+    """
+    return jax.lax.scan(step_fn, init_carry, xs=xs, length=length,
+                        unroll=unroll)

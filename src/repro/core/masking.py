@@ -1,0 +1,59 @@
+"""Implicit vector masking (paper §4 Feature 4, §6.2).
+
+REVEL's stream-control unit compares the remaining stream length against
+the destination port's vector width and predicates off the unused lanes.
+On TPU the same idea is: tiles are always full-shape (MXU/VPU lanes are
+fixed), and a mask derived from the *stream descriptor's* current trip
+count predicates the tail.  These helpers generate those masks both inside
+Pallas kernels (via broadcasted_iota) and in pure-jnp reference code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "lane_mask",
+    "tail_mask",
+    "tri_mask",
+    "masked_fill",
+    "vector_utilization",
+]
+
+
+def lane_mask(length, width: int, dtype=jnp.bool_):
+    """1D mask of `width` lanes, True for lanes < length (traced ok)."""
+    return (jax.lax.broadcasted_iota(jnp.int32, (width,), 0)
+            < jnp.asarray(length, jnp.int32)).astype(dtype)
+
+
+def tail_mask(shape: tuple[int, ...], axis: int, length) -> jnp.ndarray:
+    """N-D mask, True where index along `axis` < length."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+    return idx < jnp.asarray(length, jnp.int32)
+
+
+def tri_mask(shape: tuple[int, ...], row_axis: int, col_axis: int,
+             row_offset=0, lower: bool = True) -> jnp.ndarray:
+    """Triangular (inductive-domain) mask: col <= row + row_offset.
+
+    The triangular iteration space of Cholesky/solver/causal-attention is
+    exactly an RI stream; its in-tile predication is this mask.
+    """
+    r = jax.lax.broadcasted_iota(jnp.int32, shape, row_axis)
+    c = jax.lax.broadcasted_iota(jnp.int32, shape, col_axis)
+    r = r + jnp.asarray(row_offset, jnp.int32)
+    return (c <= r) if lower else (c >= r)
+
+
+def masked_fill(x: jnp.ndarray, mask: jnp.ndarray, fill=0.0) -> jnp.ndarray:
+    return jnp.where(mask, x, jnp.asarray(fill, x.dtype))
+
+
+def vector_utilization(trip_counts, width: int) -> float:
+    """Fraction of vector lanes doing useful work over a set of inner-loop
+    trips — the paper's Fig. 2(c,d) utilization argument, computable for
+    any stream descriptor via .trip_counts()."""
+    useful = sum(int(t) for t in trip_counts)
+    issued = sum(-(-int(t) // width) * width for t in trip_counts)
+    return useful / issued if issued else 1.0

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the REVEL/FGOP reproduction.
+
+Layout: <name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the
+jit'd backend-dispatching wrappers, ref.py the pure-jnp oracles.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    cholesky,
+    trisolve,
+    qr,
+    svd,
+    gemm,
+    fir,
+    fft,
+    flash_attention,
+    ssm_scan,
+)

@@ -1,0 +1,54 @@
+"""Shared kernel plumbing: backend selection, interpret-mode default.
+
+Every kernel in this package has three faces:
+  <name>.py  — the Pallas TPU kernel (pl.pallas_call + BlockSpec)
+  ops.py     — the jit'd public wrapper, backend-dispatching
+  ref.py     — the pure-jnp oracle
+
+On TPU the Pallas path compiles natively; on this CPU container it runs in
+interpret=True mode (Python evaluation of the kernel body) for correctness
+validation, while `backend='xla'` gives the fast pure-jnp path used by the
+CPU benchmarks and as the production fallback.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+__all__ = ["interpret_default", "on_tpu", "resolve_backend", "cdiv",
+           "round_up"]
+
+
+@functools.cache
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return not on_tpu()
+
+
+def resolve_backend(backend: str | None) -> str:
+    """'pallas' | 'xla' | None(auto: pallas on TPU, xla elsewhere)."""
+    if backend is None:
+        return "pallas" if on_tpu() else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"backend must be 'pallas'|'xla', got {backend!r}")
+    return backend
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every kernel — the ground truth for allclose tests.
+
+These are deliberately naive/unfused implementations (the "no-FGOP"
+baselines): each region is a separate pass over memory, triangular domains
+are computed rectangularly then masked, nothing stays in registers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------- factorizations ----------------
+
+def cholesky(a: jax.Array) -> jax.Array:
+    """(B, N, N) SPD -> lower L."""
+    return jnp.linalg.cholesky(a)
+
+
+def trisolve(l: jax.Array, b: jax.Array, *, lower: bool = True) -> jax.Array:
+    """(B,N,N) x (B,N,M)."""
+    return jax.vmap(
+        lambda li, bi: jax.scipy.linalg.solve_triangular(li, bi, lower=lower)
+    )(l, b)
+
+
+def qr(a: jax.Array):
+    """Householder QR, same math as the kernel but unfused jnp.
+    a: (B, M, N) -> (Q, R)."""
+
+    def one(a0):
+        m, n = a0.shape
+        q = jnp.eye(m, dtype=a0.dtype)
+        r = a0
+        rows = jnp.arange(m)
+
+        def step(k, qr_):
+            q, r = qr_
+            x = jnp.where(rows >= k, r[:, k], 0.0)
+            xk = r[k, k]
+            norm = jnp.sqrt(jnp.sum(x * x))
+            alpha = jnp.where(xk >= 0, -norm, norm)
+            v = x - alpha * (rows == k).astype(r.dtype)
+            vnorm2 = jnp.maximum(jnp.sum(v * v), 1e-30)
+            tau = jnp.where(norm < 1e-30, 0.0, 2.0 / vnorm2)
+            w = tau * (v @ r)
+            r = r - v[:, None] * w[None, :]
+            u = tau * (q @ v)
+            q = q - u[:, None] * v[None, :]
+            return q, r
+
+        q, r = jax.lax.fori_loop(0, min(n, m - 1) if m > 1 else 0,
+                                 step, (q, r))
+        return q, jnp.triu(r[:, :n])
+
+    return jax.vmap(one)(a)
+
+
+def svd_vals(a: jax.Array) -> jax.Array:
+    """Singular values, descending. a: (B, M, N)."""
+    return jnp.linalg.svd(a, compute_uv=False)
+
+
+# ---------------- dense / DSP ----------------
+
+def gemm(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Valid-mode correlation-style FIR matching the kernel tap order:
+    y[i] = sum_j h[j] * x[i + j]."""
+    return jnp.convolve(x, h[::-1], mode="valid")
+
+
+def fft(x_re: jax.Array, x_im: jax.Array):
+    """Batched complex FFT. (B, N) each -> (re, im)."""
+    z = jnp.fft.fft(x_re + 1j * x_im.astype(jnp.complex64))
+    return jnp.real(z).astype(x_re.dtype), jnp.imag(z).astype(x_im.dtype)
+
+
+# ---------------- LM-side kernels ----------------
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        scale: float | None = None, bias: jax.Array | None = None
+        ) -> jax.Array:
+    """Reference attention. q: (B,H,S,D), k/v: (B,Hkv,S,D); GQA by head
+    replication. f32 softmax."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(k.shape[2])[None, :]
+        logits = jnp.where(ki <= qi, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)
+
+
+def ssm_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+             h0: jax.Array | None = None):
+    """Naive sequential SSD/Mamba2 recurrence (the oracle).
+
+    x: (B, S, H, P)   per-head inputs
+    a: (B, S, H)      decay in (0,1]  (already exp(-softplus...) form)
+    b: (B, S, N)      input projection  (shared across heads, G=1)
+                      or (B, S, H, N) per-head
+    c: (B, S, N)      output projection (same layouts as b)
+    h0: (B, H, N, P)  initial state
+    returns y: (B, S, H, P), h_final: (B, H, N, P)
+    state update: h = a_t * h + b_t outer x_t ;  y_t = c_t @ h
+    """
+    bs, s, hh, p = x.shape
+    n = b.shape[-1]
+    per_head = b.ndim == 4
+    if h0 is None:
+        h0 = jnp.zeros((bs, hh, n, p), x.dtype)
+
+    def step(h, t):
+        xt, at, bt, ct = t
+        # h: (B,H,N,P)
+        if per_head:
+            h = at[:, :, None, None] * h \
+                + jnp.einsum("bhn,bhp->bhnp", bt, xt)
+            y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        else:
+            h = at[:, :, None, None] * h \
+                + jnp.einsum("bn,bhp->bhnp", bt, xt)
+            y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hf

@@ -1,0 +1,98 @@
+"""Batched one-sided Jacobi SVD (paper Fig. 6 right).
+
+The pair loop (p, q) with q in [p+1, n) is itself an inductive (RI)
+iteration domain — the inner fori_loop's lower bound depends on the outer
+iterator, exactly the stream shape REVEL encodes with a stretch parameter.
+The rotation-parameter region (div/sqrt chains) is the non-critical
+dataflow; the two-column rotations are the critical vector region.
+
+Works on (B, M, N) with M >= N; returns U (B,M,N), S (B,N), V (B,N,N)
+with A ~= U * S @ V^T (singular values unsorted; ops.py sorts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+
+def _rotate_pair(mat, p, q, cs, sn):
+    colp = jax.lax.dynamic_slice(mat, (0, p), (mat.shape[0], 1))
+    colq = jax.lax.dynamic_slice(mat, (0, q), (mat.shape[0], 1))
+    newp = cs * colp - sn * colq
+    newq = sn * colp + cs * colq
+    mat = jax.lax.dynamic_update_slice(mat, newp, (0, p))
+    return jax.lax.dynamic_update_slice(mat, newq, (0, q))
+
+
+def _svd_kernel(a_ref, u_ref, s_ref, v_ref, *, m: int, n: int, sweeps: int):
+    a = a_ref[0].astype(jnp.float32)
+    v = jnp.eye(n, dtype=jnp.float32)
+
+    def pair_body(p, q, av):
+        a, v = av
+        colp = jax.lax.dynamic_slice(a, (0, p), (m, 1))[:, 0]
+        colq = jax.lax.dynamic_slice(a, (0, q), (m, 1))[:, 0]
+        # ---- non-critical point region: rotation parameters ----
+        alpha = jnp.sum(colp * colp)
+        beta = jnp.sum(colq * colq)
+        gamma = jnp.sum(colp * colq)
+        small = jnp.abs(gamma) <= 1e-12 * jnp.sqrt(alpha * beta) + 1e-30
+        zeta = (beta - alpha) / (2.0 * jnp.where(small, 1.0, gamma))
+        t = jnp.sign(zeta) / (jnp.abs(zeta) + jnp.sqrt(1.0 + zeta * zeta))
+        t = jnp.where(zeta == 0.0, 1.0, t)
+        cs = jax.lax.rsqrt(1.0 + t * t)
+        sn = cs * t
+        cs = jnp.where(small, 1.0, cs)
+        sn = jnp.where(small, 0.0, sn)
+        # ---- critical region: rotate columns of A and V ----
+        a = _rotate_pair(a, p, q, cs, sn)
+        v = _rotate_pair(v, p, q, cs, sn)
+        return a, v
+
+    def sweep(_, av):
+        def outer(p, av):
+            # inductive inner bound: q in [p+1, n) — RI domain
+            return jax.lax.fori_loop(
+                p + 1, n, lambda q, av_: pair_body(p, q, av_), av)
+        return jax.lax.fori_loop(0, n - 1, outer, av)
+
+    a, v = jax.lax.fori_loop(0, sweeps, sweep, (a, v))
+    s = jnp.sqrt(jnp.sum(a * a, axis=0))
+    u = a / jnp.maximum(s, 1e-30)[None, :]
+    u_ref[0] = u.astype(u_ref.dtype)
+    s_ref[0] = s.astype(s_ref.dtype)
+    v_ref[0] = v.astype(v_ref.dtype)
+
+
+def svd_pallas(a: jax.Array, *, sweeps: int = 12,
+               interpret: bool | None = None):
+    b, m, n = a.shape
+    assert m >= n
+    if interpret is None:
+        interpret = interpret_default()
+    return pl.pallas_call(
+        functools.partial(_svd_kernel, m=m, n=n, sweeps=sweeps),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, m, n), lambda i: (i, 0, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=[
+            pl.BlockSpec((1, m, n), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, n), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m, n), a.dtype),
+            jax.ShapeDtypeStruct((b, n), a.dtype),
+            jax.ShapeDtypeStruct((b, n, n), a.dtype),
+        ],
+        interpret=interpret,
+    )(a)

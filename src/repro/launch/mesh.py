@@ -1,0 +1,18 @@
+"""Production mesh construction (function, not constant: importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh for tests (requires xla_force_host_platform_device_count
+    to be set by the test before first jax use)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

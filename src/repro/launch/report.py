@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+artifact:  PYTHONPATH=src python -m repro.launch.report [results.jsonl]"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str):
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    # keep the newest record per cell
+    by_cell = {}
+    for r in recs:
+        by_cell[(r["arch"], r["shape"], r["mesh"])] = r
+    return by_cell
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.1f}"
+
+
+def dryrun_table(cells) -> str:
+    out = ["| arch | shape | mesh | chips | GiB/dev | HLO TFLOP/dev | "
+           "HBM GB/dev | coll GB/dev | compile s |",
+           "|---|---|---|---:|---:|---:|---:|---:|---:|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if r["status"] == "skipped":
+            out.append(f"| {a} | {s} | {m} | — | — | — | — | — | skipped: "
+                       f"{r['reason'][:40]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | {m} | — | — | — | — | — | "
+                       f"**{r['status']}** |")
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {a} | {s} | {m} | {r['chips']} "
+            f"| {fmt_bytes(r['memory']['per_device_total'])} "
+            f"| {rl['hlo_flops'] / 1e12:.2f} "
+            f"| {rl['hlo_bytes'] / 1e9:.1f} "
+            f"| {rl['coll_bytes'] / 1e9:.2f} "
+            f"| {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(cells) -> str:
+    out = ["| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck | "
+           "useful | step s (max) | MFU |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if m != "single" or r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {a} | {s} | {rl['t_compute']:.3g} | {rl['t_memory']:.3g} "
+            f"| {rl['t_collective']:.3g} | **{rl['bottleneck']}** "
+            f"| {rl['useful_ratio']:.2f} | {rl['step_time']:.3g} "
+            f"| {rl['mfu'] * 100:.1f}% |")
+    return "\n".join(out)
+
+
+def summary(cells) -> str:
+    ok = sum(r["status"] == "ok" for r in cells.values())
+    sk = sum(r["status"] == "skipped" for r in cells.values())
+    bad = len(cells) - ok - sk
+    return (f"{len(cells)} cells: {ok} compiled OK, {sk} skipped "
+            f"(documented long_500k inapplicability), {bad} failed")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
+    cells = load(path)
+    print("## Dry-run —", summary(cells))
+    print()
+    print(dryrun_table(cells))
+    print()
+    print("## Roofline (single-pod 16x16, 256 chips)")
+    print()
+    print(roofline_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Assigned input-shape cells and abstract input specs for the dry-run.
+
+Shapes (per the assignment):
+  train_4k    seq 4096  global_batch 256   -> train_step
+  prefill_32k seq 32768 global_batch 32    -> prefill (forward, no loss)
+  decode_32k  seq 32768 global_batch 128   -> serve_step (1 token, full cache)
+  long_500k   seq 524288 global_batch 1    -> serve_step; ONLY for
+              sub-quadratic archs (zamba2, xlstm) — skip documented in
+              DESIGN.md for the 8 pure full-attention archs.
+
+input_specs() returns ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation); frontends are stubs (precomputed patch/frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+SRC_LEN = 1024  # encoder frames for audio decode cells
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: no sub-quadratic path"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, seq: int, batch: int, *, labels: bool):
+    out = {"tokens": _sds((batch, seq), jnp.int32)}
+    if labels:
+        out["labels"] = _sds((batch, seq), jnp.int32)
+    if cfg.frontend == "vision":
+        out["vision_embeds"] = _sds((batch, cfg.n_prefix, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.frontend == "audio":
+        out["src_embeds"] = _sds((batch, SRC_LEN if seq > 4096 else seq,
+                                  cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: D.init_cache(cfg, batch, max_len, src_len=SRC_LEN))
+
+
+def decode_extra_specs(cfg: ArchConfig, batch: int):
+    return {"tokens": _sds((batch, 1), jnp.int32),
+            "pos": _sds((batch,), jnp.int32)}
+
+
+def tune_for_shape(cfg: ArchConfig, shape: str) -> ArchConfig:
+    """Per-cell compile policy: attention impl + chunk sizes + microbatch."""
+    meta = SHAPES[shape]
+    upd: dict = {}
+    if meta["kind"] == "train":
+        upd["attn_impl"] = "chunked"
+        upd["attn_chunk"] = 512
+    elif meta["kind"] == "prefill":
+        upd["attn_impl"] = "chunked"
+        upd["attn_chunk"] = 512
+        upd["remat"] = "none"
+    return dataclasses.replace(cfg, **upd) if upd else cfg

@@ -1,0 +1,200 @@
+"""Single-token decode (serve_step) for every family.
+
+The decode step consumes a pre-allocated cache:
+  dense/moe/vlm : per-layer KV cache (L,B,Smax,KV,Dh); live length = pos+1
+                  (implicit masking over the rectangular cache)
+  hybrid        : mamba states (O(1)) + KV caches for the 6 shared-block
+                  applications
+  ssm (xlstm)   : mLSTM matrix memories + sLSTM scalar states (O(1) —
+                  the sub-quadratic long_500k path)
+  audio         : decoder self-KV cache + precomputed encoder memory and
+                  the cross-attention K/V never change during decode
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import ssm as ssmm
+from repro.models import xlstm as xlm
+from repro.models.config import ArchConfig
+from repro.models.layers import rms_norm
+from repro.models.transformer import _out_head, encode
+
+
+# ---------------- cache init ----------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, src_len: int = 1024):
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv, dh = cfg.n_kv, cfg.d_head
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh),
+                               dtype),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh),
+                               dtype)}
+    if cfg.family == "hybrid":
+        napp = cfg.n_layers // cfg.shared_every
+        kv, dh = cfg.n_kv, cfg.d_head
+        mc = ssmm.init_mamba_cache(cfg, batch, cfg.n_layers)
+        mc["k"] = jnp.zeros((napp, batch, max_len, kv, dh), dtype)
+        mc["v"] = jnp.zeros((napp, batch, max_len, kv, dh), dtype)
+        return mc
+    if cfg.family == "ssm":
+        cx = cfg.xlstm
+        g = cx.m_per_group + cx.s_per_group
+        groups = cfg.n_layers // g
+        nm = groups * cx.m_per_group
+        ns = groups * cx.s_per_group
+        return {
+            "m": jax.vmap(lambda _: xlm.init_mlstm_state(
+                cfg, cfg.d_model, batch, cfg.n_heads))(jnp.arange(nm)),
+            "s": jax.vmap(lambda _: xlm.init_slstm_state(
+                cfg.d_model, batch))(jnp.arange(ns)),
+        }
+    if cfg.family == "audio":
+        kv, dh = cfg.n_kv, cfg.d_head
+        return {
+            "k": jnp.zeros((cfg.dec_layers, batch, max_len, kv, dh), dtype),
+            "v": jnp.zeros((cfg.dec_layers, batch, max_len, kv, dh), dtype),
+            "enc_out": jnp.zeros((batch, src_len, cfg.d_model), dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+def warm_cache_audio(p, cfg, cache, src_embeds):
+    cache = dict(cache)
+    cache["enc_out"] = encode(p, cfg, src_embeds).astype(
+        cache["enc_out"].dtype)
+    return cache
+
+
+# ---------------- per-family steps ----------------
+
+def _dense_decode_stack(p_layers, cfg, x, cache_k, cache_v, pos,
+                        enc_out=None):
+    def step(x_, t):
+        lp, ck, cv = t
+        h, ck, cv = attn.attention_decode(
+            lp["attn"], cfg, rms_norm(x_, lp["ln1"], cfg.norm_eps),
+            ck, cv, pos)
+        x_ = x_ + h
+        if "cross" in lp and enc_out is not None:
+            q = rms_norm(x_, lp["ln_x"], cfg.norm_eps)
+            h = attn.attention_train(lp["cross"], cfg, q, pos[:, None],
+                                     causal=False, kv_x=enc_out)
+            x_ = x_ + h
+        xn = rms_norm(x_, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _ = mlpm.moe(lp["moe"], xn, cfg.moe,
+                            deterministic_capacity=max(
+                                8, xn.shape[0] * cfg.moe.top_k
+                                // cfg.moe.n_experts + 1))
+            h = h
+        else:
+            h = mlpm.mlp(lp["mlp"], xn, cfg.act)
+        x_ = x_ + h
+        return x_, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(step, x, (p_layers, cache_k, cache_v))
+    return x, ks, vs
+
+
+def decode_step(p, cfg: ArchConfig, cache, tokens, pos):
+    """tokens: (B,1) int32; pos: (B,) current positions (uniform).
+    Returns (logits (B,V) f32, new cache)."""
+    x = p["embed"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+    b = x.shape[0]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, ks, vs = _dense_decode_stack(p["layers"], cfg, x,
+                                        cache["k"], cache["v"], pos)
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "audio":
+        x, ks, vs = _dense_decode_stack(
+            p["layers"], cfg, x, cache["k"], cache["v"], pos,
+            enc_out=cache["enc_out"].astype(x.dtype))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_groups, cfg.shared_every) + a.shape[1:]),
+            {k: v for k, v in p["layers"].items()})
+        mstate = cache["state"].reshape(
+            (n_groups, cfg.shared_every) + cache["state"].shape[1:])
+        mconv = cache["conv"].reshape(
+            (n_groups, cfg.shared_every) + cache["conv"].shape[1:])
+
+        def group(x_, t):
+            gp, st, cv, ck_, cv_ = t
+
+            def inner(x__, tt):
+                lp, s_, c_ = tt
+                h, s_, c_ = ssmm.mamba_decode(lp, cfg, x__, s_, c_)
+                return x__ + h, (s_, c_)
+
+            x_, (st, cv) = jax.lax.scan(inner, x_, (gp, st, cv))
+            # shared attention+mlp block
+            h, ck_, cv_ = attn.attention_decode(
+                p["shared"]["attn"], cfg,
+                rms_norm(x_, p["shared"]["ln1"], cfg.norm_eps),
+                ck_, cv_, pos)
+            x_ = x_ + h
+            xn = rms_norm(x_, p["shared"]["ln2"], cfg.norm_eps)
+            x_ = x_ + mlpm.mlp(p["shared"]["mlp"], xn, cfg.act)
+            return x_, (st, cv, ck_, cv_)
+
+        x, (st, cv, ks, vs) = jax.lax.scan(
+            group, x, (stacked, mstate, mconv, cache["k"], cache["v"]))
+        cache = {"state": st.reshape(cache["state"].shape),
+                 "conv": cv.reshape(cache["conv"].shape),
+                 "k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        cx = cfg.xlstm
+        g = cx.m_per_group + cx.s_per_group
+        groups = cfg.n_layers // g
+        mp = jax.tree.map(
+            lambda a: a.reshape((groups, cx.m_per_group) + a.shape[1:]),
+            p["layers"]["m"])
+        sp = jax.tree.map(
+            lambda a: a.reshape((groups, cx.s_per_group) + a.shape[1:]),
+            p["layers"]["s"])
+        mst = cache["m"].reshape((groups, cx.m_per_group)
+                                 + cache["m"].shape[1:])
+        sst = jax.tree.map(
+            lambda a: a.reshape((groups, cx.s_per_group) + a.shape[1:]),
+            cache["s"])
+
+        def group(x_, t):
+            gmp, gsp, gms, gss = t
+
+            def mstep(x__, tt):
+                lp, s_ = tt
+                h, s_ = xlm.mlstm_decode(lp, cfg, x__, s_, cfg.n_heads)
+                return x__ + h, s_
+
+            x_, gms = jax.lax.scan(mstep, x_, (gmp, gms))
+
+            def sstep(x__, tt):
+                lp, s_ = tt
+                h, s_ = xlm.slstm_decode(lp, cfg, x__, s_)
+                return x__ + h, s_
+
+            x_, gss = jax.lax.scan(sstep, x_, (gsp, gss))
+            return x_, (gms, gss)
+
+        x, (mst, sst) = jax.lax.scan(group, x, (mp, sp, mst, sst))
+        cache = {"m": mst.reshape(cache["m"].shape),
+                 "s": jax.tree.map(lambda a, ref: a.reshape(ref.shape),
+                                   sst, cache["s"])}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    w = _out_head(p, cfg)
+    logits = (x[:, 0] @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,239 @@
+"""Feed-forward blocks: dense (SwiGLU / squared-ReLU / GELU) and MoE.
+
+MoE uses capacity-based per-expert token selection (expert-capacity
+top-C over router gates).  The capacity cut is *implicit vector masking*
+over a data-dependent (inductive) production rate: each expert consumes a
+different, router-determined number of tokens per step — the FGOP F2
+analog at the distributed level (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+
+def init_mlp(key, d: int, f: int, act: str):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wi": dense_init(ks[0], (d, f)),
+                "wg": dense_init(ks[1], (d, f)),
+                "wo": dense_init(ks[2], (f, d))}
+    return {"wi": dense_init(ks[0], (d, f)),
+            "wo": dense_init(ks[2], (f, d))}
+
+
+def mlp(p, x, act: str):
+    dt = x.dtype
+    if act == "swiglu":
+        hi = x @ p["wi"].astype(dt)
+        hg = x @ p["wg"].astype(dt)
+        h = jax.nn.silu(hg) * hi
+    elif act == "sq_relu":
+        h = x @ p["wi"].astype(dt)
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------- MoE ----------------
+
+def init_moe(key, d: int, cfg_moe):
+    e = cfg_moe.e_pad
+    f = cfg_moe.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "wi": dense_init(ks[1], (e, d, f)),
+        "wg": dense_init(ks[2], (e, d, f)),
+        "wo": dense_init(ks[3], (e, f, d)),
+    }
+    if cfg_moe.n_shared:
+        p["shared"] = init_mlp(ks[4], d, cfg_moe.d_ff_shared, "swiglu")
+    return p
+
+
+def moe_a2a(p, x, cfg_moe, norm_w=None, eps=1e-5):
+    """Explicit expert parallelism via shard_map (the production EP path;
+    `moe_dispatch='a2a'`).
+
+    Key observation: under DP+TP the token activations are *replicated*
+    across the 'model' axis, so every model shard can route its OWN
+    experts' tokens locally — the dispatch needs NO communication at all
+    (GSPMD's dense lowering instead all-reduces the full token tensor).
+    Only the combine is collective: each model shard contributes partial
+    outputs for the experts it owns -> one psum over 'model'.  Expert
+    weights stay FSDP-sharded and are all-gathered over 'data' per layer
+    (overlappable; bytes = weights/16, tiny next to the token tensor).
+
+    Per-layer collective bytes (dbrx, per device):
+      dense-GSPMD:  all-reduce(T_loc x D f32) interleaved with gathers of
+                    the full dispatched (E, C, D) tensor  ->  ~220 GB
+      a2a/EP:       psum(T_loc x D) + weight gather       ->  ~3.3 GB
+    """
+    mesh = shd.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        out, aux = moe(p, x, cfg_moe)
+        return out, aux
+
+    b, s, d = x.shape
+    e_pad = cfg_moe.e_pad
+    m = shd.mesh_axis_size("model")
+    assert e_pad % m == 0, (e_pad, m)
+    e_loc = e_pad // m
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = 1
+    for a in data_axes:
+        dsize *= shd.mesh_axis_size(a)
+    # tokens dim to shard over the data axes: batch if divisible (the
+    # natural DP layout), else sequence (gradient-accumulation microbatches
+    # can make B_local < data size; S always divides at our shapes)
+    if b % max(dsize, 1) == 0 or not data_axes:
+        tok_spec = P(data_axes or None, None, None)
+    elif s % dsize == 0:
+        tok_spec = P(None, data_axes, None)
+    else:  # fall back to the GSPMD dense path
+        return moe(p, x, cfg_moe)
+
+    def local(xl, router, wi, wg, wo):
+        """Per-device body. xl: (B_loc, S, D) local tokens (replicated
+        over 'model'); router replicated; wi/wg/wo: this model shard's
+        experts, FSDP-sharded on D -> gathered over 'data'."""
+        wi = jax.lax.all_gather(wi, "data", axis=1, tiled=True)
+        wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+        wo = jax.lax.all_gather(wo, "data", axis=2, tiled=True)
+        bl, sl, _ = xl.shape
+        t = bl * sl
+        k = cfg_moe.top_k
+        e_real = cfg_moe.n_experts
+        cap = max(8, int(cfg_moe.capacity_factor * k * t / e_real))
+        cap = min(cap, t)
+
+        xt = xl.reshape(t, d)
+        logits = (xt @ router.astype(xl.dtype)).astype(jnp.float32)
+        if e_pad != e_real:
+            pad_mask = jnp.arange(e_pad) < e_real
+            logits = jnp.where(pad_mask[None, :], logits, -1e30)
+        gates = jax.nn.softmax(logits, axis=-1)              # (T, E)
+        topv, topi = jax.lax.top_k(gates, k)
+        elig = jnp.zeros_like(gates).at[
+            jnp.arange(t)[:, None], topi].set(topv)          # (T, E)
+
+        # my experts only: dispatch is local (tokens replicated on model)
+        my0 = jax.lax.axis_index("model") * e_loc
+        elig_my = jax.lax.dynamic_slice(elig, (0, my0), (t, e_loc))
+        gv, gi = jax.lax.top_k(elig_my.T, cap)               # (e_loc, C)
+        xe = xt[gi]                                          # (e_loc,C,D)
+
+        dt = xl.dtype
+        hi = jnp.einsum("ecd,edf->ecf", xe, wi.astype(dt))
+        hg = jnp.einsum("ecd,edf->ecf", xe, wg.astype(dt))
+        he = jax.nn.silu(hg) * hi
+        ye = jnp.einsum("ecf,efd->ecd", he, wo.astype(dt))
+        ye = ye * gv[..., None].astype(dt)
+
+        part = jnp.zeros((t, d), jnp.float32).at[gi.reshape(-1)].add(
+            ye.reshape(-1, d).astype(jnp.float32))
+        out = jax.lax.psum(part, "model").astype(dt)         # combine
+
+        # aux loss from global stats (cheap scalars)
+        pe = jnp.mean(gates[:, :e_real], axis=0)
+        fe = jnp.mean((elig[:, :e_real] > 0).astype(jnp.float32), axis=0)
+        if data_axes:
+            pe = jax.lax.pmean(pe, data_axes)
+            fe = jax.lax.pmean(fe, data_axes)
+        aux = e_real * jnp.sum(fe * pe)
+        return out.reshape(bl, sl, d), aux
+
+    in_specs = (
+        tok_spec,                                          # x
+        P(None, None),                                     # router
+        P("model", "data", None),                          # wi (E,D,F)
+        P("model", "data", None),                          # wg
+        P("model", None, "data"),                          # wo (E,F,D)
+    )
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(tok_spec, P()),
+        check_vma=False)
+    out, aux = fn(x, p["router"], p["wi"], p["wg"], p["wo"])
+    if "shared" in p:       # always-on shared experts: plain GSPMD path
+        out = out + mlp(p["shared"], x, "swiglu")
+    return out, aux
+
+
+def moe(p, x, cfg_moe, *, deterministic_capacity: int | None = None,
+        dispatch: str = "dense"):
+    """x: (B,S,D) -> (B,S,D).  Expert-capacity routing:
+
+    1. router logits -> softmax gates (T, E); padded experts masked off.
+    2. token-choice top-k defines eligibility (gate kept only for chosen).
+    3. each expert gathers its top-C eligible tokens (capacity C).
+    4. FFN per expert (vmap -> einsum over E), weighted scatter-add back.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e_real, e_pad, k = cfg_moe.n_experts, cfg_moe.e_pad, cfg_moe.top_k
+    cap = deterministic_capacity or max(
+        8, int(cfg_moe.capacity_factor * k * t / e_real))
+    cap = min(cap, t)
+
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    if e_pad != e_real:
+        pad_mask = jnp.arange(e_pad) < e_real
+        logits = jnp.where(pad_mask[None, :], logits, -1e30)
+    gates = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+
+    # token-choice top-k eligibility
+    topv, topi = jax.lax.top_k(gates, k)                     # (T, k)
+    elig = jnp.zeros_like(gates).at[
+        jnp.arange(t)[:, None], topi].set(topv)              # (T, E)
+
+    # expert-choice capacity: each expert takes its top-C eligible tokens
+    gv, gi = jax.lax.top_k(elig.T, cap)                      # (E, C)
+    xe = xt[gi]                                              # (E, C, D)
+    if dispatch == "sharded":
+        # keep the dispatched tokens expert-sharded (EP over 'model'): the
+        # gather becomes the all-to-all-style dispatch, expert FFN compute
+        # never leaves the expert shard
+        xe = constrain(xe, "experts", None, None)
+    elif dispatch == "ep2d":
+        # 2D dispatch: experts over 'model', capacity over 'data' — each
+        # device owns a (E/16, C/16) tile of the dispatched tokens, so
+        # neither the token gather nor the expert compute replicates
+        xe = constrain(xe, "experts", "expert_cap", None)
+
+    dt = x.dtype
+    hi = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))
+    he = jax.nn.silu(hg) * hi
+    ye = jnp.einsum("ecf,efd->ecd", he, p["wo"].astype(dt))  # (E, C, D)
+    ye = ye * gv[..., None].astype(dt)                       # gate weight
+    if dispatch == "sharded":
+        ye = constrain(ye, "experts", None, None)
+    elif dispatch == "ep2d":
+        ye = constrain(ye, "experts", "expert_cap", None)
+
+    out = jnp.zeros((t, d), dt).at[gi.reshape(-1)].add(
+        ye.reshape(-1, d))
+    if dispatch in ("sharded", "rs", "ep2d"):
+        # combine: partial sums per expert shard reduce-scatter into the
+        # token (batch) sharding instead of a replicated all-reduce
+        # ('rs' = combine-only: no dispatch-side constraints)
+        out = constrain(out, "batch", None)
+    if cfg_moe.n_shared:
+        out = out + mlp(p["shared"], xt, "swiglu")
+    # aux load-balancing loss (Switch-style): E * sum(f_e * p_e)
+    pe = jnp.mean(gates[:, :e_real], axis=0)                 # mean gate
+    fe = jnp.mean((elig[:, :e_real] > 0).astype(jnp.float32), axis=0)
+    aux = e_real * jnp.sum(fe * pe)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,124 @@
+"""Mamba2 block built on the chunked ssm_scan kernel (ordered dependence).
+
+Train path uses ops.ssm_scan (chunked FGOP scan); decode path is the O(1)
+recurrent update (state + short-conv buffer carried in the decode cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_mamba(key, d: int, cfg_ssm):
+    di = cfg_ssm.expand * d
+    n = cfg_ssm.state
+    h = cfg_ssm.heads
+    kc = cfg_ssm.conv_kernel
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z(di), x(di), B(n), C(n), dt(h)]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h)),
+        "w_out": dense_init(ks[1], (di, d)),
+        "conv_w": dense_init(ks[2], (kc, di + 2 * n)),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _split_proj(p, cfg_ssm, d, proj):
+    di = cfg_ssm.expand * d
+    n = cfg_ssm.state
+    z = proj[..., :di]
+    xc = proj[..., di:2 * di]
+    bmat = proj[..., 2 * di:2 * di + n]
+    cmat = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, xc, bmat, cmat, dt
+
+
+def _causal_conv(x, w):
+    """x: (B,S,C), w: (K,C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def mamba_train(p, cfg, x):
+    """x: (B,S,D) -> (B,S,D)."""
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    di = ssm.expand * d
+    hh = ssm.heads
+    pp = di // hh
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xc, bmat, cmat, dt = _split_proj(p, ssm, d, proj)
+    # causal short conv over [x, B, C] (mamba2 convention)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype)))
+    xc = conv[..., :di]
+    bmat = conv[..., di:di + ssm.state]
+    cmat = conv[..., di + ssm.state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])      # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, None, :] * dt)    # decay (0,1)
+    xh = xc.reshape(b, s, hh, pp)
+    xin = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, _ = ops.ssm_scan(xin, a.astype(x.dtype), bmat, cmat, chunk=ssm.chunk,
+                        backend="xla")
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+# ---------------- decode ----------------
+
+def init_mamba_cache(cfg, batch: int, n_layers: int, dtype=jnp.float32):
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    return {
+        "state": jnp.zeros((n_layers, batch, ssm.heads, ssm.state,
+                            di // ssm.heads), dtype),
+        "conv": jnp.zeros((n_layers, batch, ssm.conv_kernel - 1,
+                           di + 2 * ssm.state), dtype),
+    }
+
+
+def mamba_decode(p, cfg, x, state, conv_buf):
+    """x: (B,1,D); state: (B,H,N,P); conv_buf: (B,K-1,C)."""
+    ssm = cfg.ssm
+    b, _, d = x.shape
+    di = ssm.expand * d
+    hh = ssm.heads
+    pp = di // hh
+    proj = x[:, 0] @ p["w_in"].astype(x.dtype)               # (B, ...)
+    z, xc, bmat, cmat, dt = _split_proj(p, ssm, d, proj)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)     # (B,C)
+    window = jnp.concatenate(
+        [conv_buf.astype(x.dtype), conv_in[:, None]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))
+    new_buf = window[:, 1:].astype(conv_buf.dtype)
+    xc = conv[:, :di]
+    bmat = conv[:, di:di + ssm.state]
+    cmat = conv[:, di + ssm.state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt)          # (B,H)
+    xh = xc.reshape(b, hh, pp).astype(jnp.float32) * dt[..., None]
+    state = a[..., None, None] * state + jnp.einsum(
+        "bn,bhp->bhnp", bmat.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), state)
+    y = y.astype(x.dtype) + xc.reshape(b, hh, pp) \
+        * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"].astype(x.dtype))[:, None]
+    return out, state, new_buf

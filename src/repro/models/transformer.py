@@ -1,0 +1,297 @@
+"""Model assembly for all assigned architectures.
+
+Families:
+  dense / moe / vlm : token embed (+ vision prefix) -> scan(L x block)
+  hybrid (zamba2)   : scan over groups of mamba layers with one *shared*
+                      attention+MLP block applied between groups
+  ssm (xlstm)       : groups of (m x mLSTM + s x sLSTM)
+  audio (enc-dec)   : encoder (bidir) over frame embeds + causal decoder
+                      with cross-attention
+
+All stacks scan over layers (compile-time O(1) in depth) with a
+configurable remat policy.  The LM loss is chunked over the sequence so
+(B*S, V) logits never materialize.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import ssm as ssmm
+from repro.models import xlstm as xlm
+from repro.models.config import ArchConfig
+from repro.models.layers import embed_init, rms_norm, softmax_xent
+
+
+# ---------------- init ----------------
+
+def _init_block(key, cfg: ArchConfig):
+    """One dense transformer block (attention + mlp/moe)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.family == "moe":
+        p["moe"] = mlpm.init_moe(k2, cfg.d_model, cfg.moe)
+    else:
+        p["mlp"] = mlpm.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _init_cross_block(key, cfg: ArchConfig):
+    p = _init_block(key, cfg)
+    k = jax.random.fold_in(key, 99)
+    p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["cross"] = attn.init_attention(k, cfg)
+    return p
+
+
+def _stack(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    p: dict = {"embed": embed_init(ks[0], (cfg.vocab, cfg.d_model)),
+               "ln_f": jnp.ones((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[1], (cfg.d_model, cfg.vocab))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["layers"] = _stack(lambda k: _init_block(k, cfg), ks[2],
+                             cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack(
+            lambda k: ssmm.init_mamba(k, cfg.d_model, cfg.ssm), ks[2],
+            cfg.n_layers)
+        p["shared"] = _init_block(ks[3], cfg)
+    elif cfg.family == "ssm":
+        g = cfg.xlstm.m_per_group + cfg.xlstm.s_per_group
+        groups = cfg.n_layers // g
+        p["layers"] = {
+            "m": _stack(lambda k: xlm.init_mlstm(k, cfg.d_model, cfg.xlstm),
+                        ks[2], groups * cfg.xlstm.m_per_group),
+            "s": _stack(lambda k: xlm.init_slstm(k, cfg.d_model, cfg.xlstm),
+                        ks[3], groups * cfg.xlstm.s_per_group),
+        }
+    elif cfg.family == "audio":
+        p["enc_layers"] = _stack(lambda k: _init_block(k, cfg), ks[2],
+                                 cfg.enc_layers)
+        p["layers"] = _stack(lambda k: _init_cross_block(k, cfg), ks[3],
+                             cfg.dec_layers)
+        p["ln_enc"] = jnp.ones((cfg.d_model,), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------- blocks (train) ----------------
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    else:
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _dense_block(p, cfg: ArchConfig, x, positions, *, causal=True,
+                 enc_out=None):
+    h = attn.attention_train(p["attn"], cfg, rms_norm(x, p["ln1"],
+                                                      cfg.norm_eps),
+                             positions, causal=causal)
+    x = x + h
+    x = constrain(x, "batch", "seq", "embed")
+    aux = jnp.zeros((), jnp.float32)
+    if "cross" in p and enc_out is not None:
+        h = attn.attention_train(p["cross"], cfg,
+                                 rms_norm(x, p["ln_x"], cfg.norm_eps),
+                                 positions, causal=False, kv_x=enc_out)
+        x = x + h
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        if cfg.moe_dispatch == "a2a":
+            h, aux = mlpm.moe_a2a(p["moe"], xn, cfg.moe)
+        else:
+            h, aux = mlpm.moe(p["moe"], xn, cfg.moe,
+                              dispatch=cfg.moe_dispatch)
+    else:
+        h = mlpm.mlp(p["mlp"], xn, cfg.act)
+    x = x + h
+    return constrain(x, "batch", "seq", "embed"), aux
+
+
+def _scan_blocks(params_stacked, cfg, x, positions, *, causal=True,
+                 enc_out=None):
+    block = _remat(
+        lambda x_, p_: _dense_block(p_, cfg, x_, positions, causal=causal,
+                                    enc_out=enc_out), cfg)
+
+    def step(carry, p_):
+        x_, aux = carry
+        x_, a = block(x_, p_)
+        return (x_, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               params_stacked)
+    return x, aux
+
+
+def _hybrid_stack(p, cfg: ArchConfig, x, positions):
+    """zamba2: groups of `shared_every` mamba layers + shared attn block."""
+    mamba = _remat(lambda x_, p_: ssmm.mamba_train(p_, cfg, x_), cfg)
+    n_groups = cfg.n_layers // cfg.shared_every
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_groups, cfg.shared_every) + a.shape[1:]),
+        p["layers"])
+    shared = _remat(
+        lambda x_, p_: _dense_block(p_, cfg, x_, positions)[0], cfg)
+
+    def group(x_, gp):
+        def inner(c, lp):
+            return c + mamba(c, lp), None
+        x_, _ = jax.lax.scan(inner, x_, gp)
+        return shared(x_, p["shared"]), None
+
+    x, _ = jax.lax.scan(lambda c, gp: group(c, gp), x, stacked)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _xlstm_stack(p, cfg: ArchConfig, x):
+    cx = cfg.xlstm
+    g = cx.m_per_group + cx.s_per_group
+    groups = cfg.n_layers // g
+    m_st = jax.tree.map(
+        lambda a: a.reshape((groups, cx.m_per_group) + a.shape[1:]),
+        p["layers"]["m"])
+    s_st = jax.tree.map(
+        lambda a: a.reshape((groups, cx.s_per_group) + a.shape[1:]),
+        p["layers"]["s"])
+    mf = _remat(lambda x_, p_: xlm.mlstm_train(p_, cfg, x_, cfg.n_heads),
+                cfg)
+    sf = _remat(lambda x_, p_: xlm.slstm_train(p_, cfg, x_), cfg)
+
+    def group(x_, gp):
+        mp, sp = gp
+
+        def mstep(c, lp):
+            return c + mf(c, lp), None
+
+        x_, _ = jax.lax.scan(mstep, x_, mp)
+
+        def sstep(c, lp):
+            return c + sf(c, lp), None
+
+        x_, _ = jax.lax.scan(sstep, x_, sp)
+        return x_, None
+
+    x, _ = jax.lax.scan(group, x, (m_st, s_st))
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------- forward / loss ----------------
+
+def embed_tokens(p, cfg, tokens, extra_embeds=None):
+    x = p["embed"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate(
+            [extra_embeds.astype(x.dtype), x], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def backbone(p, cfg: ArchConfig, x, positions, enc_out=None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _scan_blocks(p["layers"], cfg, x, positions)
+    if cfg.family == "hybrid":
+        return _hybrid_stack(p, cfg, x, positions)
+    if cfg.family == "ssm":
+        return _xlstm_stack(p, cfg, x)
+    if cfg.family == "audio":
+        return _scan_blocks(p["layers"], cfg, x, positions, causal=True,
+                            enc_out=enc_out)
+    raise ValueError(cfg.family)
+
+
+def encode(p, cfg: ArchConfig, src_embeds):
+    pos = jnp.broadcast_to(jnp.arange(src_embeds.shape[1]),
+                           src_embeds.shape[:2])
+    x = src_embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x, _ = _scan_blocks(p["enc_layers"], cfg, x, pos, causal=False)
+    return rms_norm(x, p["ln_enc"], cfg.norm_eps)
+
+
+def _out_head(p, cfg):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return w
+
+
+def chunked_ce(p, cfg: ArchConfig, x, labels, mask=None):
+    """x: (B,S,D) final hidden; labels: (B,S). Scan over S chunks."""
+    b, s, d = x.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    w = _out_head(p, cfg)
+    xs = jnp.moveaxis(x.reshape(b, s // c, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, s // c, c), 1, 0)
+    ms = None if mask is None else jnp.moveaxis(
+        mask.reshape(b, s // c, c), 1, 0)
+
+    def step(acc, t):
+        if ms is None:
+            xc, lc = t
+            mc = jnp.ones(lc.shape, jnp.float32)
+        else:
+            xc, lc, mc = t
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (acc[0] + jnp.sum((lse - ll) * mc), acc[1] + jnp.sum(mc)), None
+
+    xs_all = (xs, ls) if ms is None else (xs, ls, ms)
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), xs_all)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(p, cfg: ArchConfig, batch):
+    """batch: tokens (B,S), labels (B,S); optional vision_embeds (B,P,D),
+    src_embeds (B,Ss,D) [audio], loss_mask (B,S)."""
+    tokens = batch["tokens"]
+    enc_out = None
+    extra = batch.get("vision_embeds") if cfg.frontend == "vision" else None
+    if cfg.frontend == "audio":
+        enc_out = encode(p, cfg, batch["src_embeds"])
+    x = embed_tokens(p, cfg, tokens, extra)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, aux = backbone(p, cfg, x, pos, enc_out=enc_out)
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    if extra is not None:        # loss only over the token tail
+        x = x[:, extra.shape[1]:]
+    loss = chunked_ce(p, cfg, x, batch["labels"],
+                      batch.get("loss_mask"))
+    return loss + 0.01 * aux
+
+
+def prefill(p, cfg: ArchConfig, batch):
+    """Forward w/o loss: returns last-position logits (B, V)."""
+    tokens = batch["tokens"]
+    extra = batch.get("vision_embeds") if cfg.frontend == "vision" else None
+    enc_out = None
+    if cfg.frontend == "audio":
+        enc_out = encode(p, cfg, batch["src_embeds"])
+    x = embed_tokens(p, cfg, tokens, extra)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _ = backbone(p, cfg, x, pos, enc_out=enc_out)
+    x = rms_norm(x[:, -1:], p["ln_f"], cfg.norm_eps)
+    w = _out_head(p, cfg)
+    return (x[:, 0] @ w.astype(x.dtype)).astype(jnp.float32)

@@ -1,0 +1,168 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkable) + sLSTM (strictly
+sequential scalar memory).
+
+mLSTM's recurrence  C_t = f_t C_{t-1} + i_t k_t v_t^T,  n_t = f_t n + i_t k
+is the same ordered-dependence shape as Mamba2's SSD, so it reuses
+ops.ssm_scan with per-head B/C streams and an augmented value channel
+(v ++ 1) that carries the normalizer in the same scan — one fused FGOP
+kernel instead of two.  sLSTM is *not* chunkable (its nonlinearity sits
+inside the recurrence): it is the paper's strictly-ordered, non-tileable
+case (FGOP Property 1) and runs as a lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------- mLSTM ----------------
+
+def init_mlstm(key, d: int, cfg_x):
+    di = cfg_x.expand_m * d
+    dqk = int(di * cfg_x.qk_frac)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, dqk)),
+        "wk": dense_init(ks[1], (d, dqk)),
+        "wv": dense_init(ks[2], (d, di)),
+        "wz": dense_init(ks[3], (d, di)),
+        "wf": dense_init(ks[4], (d, 1)),   # per-layer scalar gates/head add
+        "wi": dense_init(ks[5], (d, 1)),
+        "wo": dense_init(ks[6], (di, d)),
+        "norm": jnp.ones((di,), jnp.float32),
+    }
+
+
+def mlstm_train(p, cfg, x, n_heads: int):
+    b, s, d = x.shape
+    cfg_x = cfg.xlstm
+    di = cfg_x.expand_m * d
+    dqk = int(di * cfg_x.qk_frac)
+    pv = di // n_heads
+    pk = dqk // n_heads
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, n_heads, pk)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, n_heads, pk) / (pk ** 0.5)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, n_heads, pv)
+    z = x @ p["wz"].astype(dt)
+    f = jax.nn.sigmoid((x @ p["wf"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["wi"].astype(dt)).astype(jnp.float32))
+    a = jnp.broadcast_to(f, (b, s, 1)).repeat(n_heads, axis=2)  # (B,S,H)
+    # augmented value channel carries the normalizer in the same scan
+    ones = jnp.ones((b, s, n_heads, 1), dt)
+    v_aug = jnp.concatenate([v, ones], axis=-1)                 # (B,S,H,P+1)
+    bik = (k * i[..., None].astype(dt))                         # (B,S,H,N)
+    y_aug, _ = ops.ssm_scan(v_aug, a.astype(dt), bik, q,
+                            chunk=cfg.ssm.chunk if cfg.ssm else 64,
+                            backend="xla")
+    y = y_aug[..., :pv]
+    n = y_aug[..., pv:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"].astype(dt)
+
+
+def init_mlstm_state(cfg, d: int, batch: int, n_heads: int,
+                     dtype=jnp.float32):
+    cfg_x = cfg.xlstm
+    di = cfg_x.expand_m * d
+    dqk = int(di * cfg_x.qk_frac)
+    return jnp.zeros((batch, n_heads, dqk // n_heads,
+                      di // n_heads + 1), dtype)
+
+
+def mlstm_decode(p, cfg, x, state, n_heads: int):
+    """x: (B,1,D); state: (B,H,N,P+1)."""
+    b, _, d = x.shape
+    cfg_x = cfg.xlstm
+    di = cfg_x.expand_m * d
+    dqk = int(di * cfg_x.qk_frac)
+    pv = di // n_heads
+    pk = dqk // n_heads
+    dt = x.dtype
+    xt = x[:, 0]
+    q = (xt @ p["wq"].astype(dt)).reshape(b, n_heads, pk)
+    k = (xt @ p["wk"].astype(dt)).reshape(b, n_heads, pk) / (pk ** 0.5)
+    v = (xt @ p["wv"].astype(dt)).reshape(b, n_heads, pv)
+    z = xt @ p["wz"].astype(dt)
+    f = jax.nn.sigmoid((xt @ p["wf"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xt @ p["wi"].astype(dt)).astype(jnp.float32))
+    v_aug = jnp.concatenate([v, jnp.ones((b, n_heads, 1), dt)], -1)
+    state = f[..., None, None] * state + jnp.einsum(
+        "bhn,bhp->bhnp", (k * i[..., None].astype(dt)).astype(jnp.float32),
+        v_aug.astype(jnp.float32))
+    y_aug = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    y = (y_aug[..., :pv] / jnp.maximum(jnp.abs(y_aug[..., pv:]), 1.0))
+    y = y.reshape(b, di).astype(dt)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (y @ p["wo"].astype(dt))[:, None], state
+
+
+# ---------------- sLSTM ----------------
+
+def init_slstm(key, d: int, cfg_x):
+    ks = jax.random.split(key, 3)
+    fd = int(d * cfg_x.expand_s_ffn)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d)),   # z, i, f, o pre-acts
+        "r_gates": dense_init(ks[1], (d, 4 * d)),   # recurrent weights
+        "w_up": dense_init(ks[2], (d, fd)),
+        "w_down": dense_init(jax.random.fold_in(ks[2], 1), (fd, d)),
+        "norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _slstm_cell(p, carry, wx):
+    """Stabilized sLSTM cell. carry: (h, c, n, m) each (B, D)."""
+    h, c, n, m = carry
+    pre = wx + h @ p["r_gates"].astype(h.dtype)
+    z, i, f, o = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + m, i)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(i - m_new)
+    c = fp * c + ip * jnp.tanh(z)
+    n = fp * n + ip
+    h_new = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return (h_new.astype(wx.dtype), c, n, m_new)
+
+
+def slstm_train(p, cfg, x):
+    """Strictly-ordered scan over time (non-tileable FGOP case)."""
+    b, s, d = x.shape
+    wx = x @ p["w_gates"].astype(x.dtype)                    # (B,S,4D)
+    f32 = jnp.float32
+    carry = (jnp.zeros((b, d), x.dtype), jnp.zeros((b, d), f32),
+             jnp.zeros((b, d), f32), jnp.full((b, d), -1e30, f32))
+
+    def step(carry, wxt):
+        carry = _slstm_cell(p, carry, wxt)
+        return carry, carry[0]
+
+    _, hs = jax.lax.scan(step, carry, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                               # (B,S,D)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    ff = jax.nn.gelu(h @ p["w_up"].astype(x.dtype))
+    return ff @ p["w_down"].astype(x.dtype)
+
+
+def init_slstm_state(d: int, batch: int):
+    f32 = jnp.float32
+    return {"h": jnp.zeros((batch, d), f32), "c": jnp.zeros((batch, d), f32),
+            "n": jnp.zeros((batch, d), f32),
+            "m": jnp.full((batch, d), -1e30, f32)}
+
+
+def slstm_decode(p, cfg, x, st):
+    b, _, d = x.shape
+    wx = x[:, 0] @ p["w_gates"].astype(x.dtype)
+    carry = (st["h"].astype(x.dtype), st["c"], st["n"], st["m"])
+    h, c, n, m = _slstm_cell(p, carry, wx)
+    st = {"h": h.astype(jnp.float32), "c": c, "n": n, "m": m}
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    ff = jax.nn.gelu(hn @ p["w_up"].astype(x.dtype))
+    return (ff @ p["w_down"].astype(x.dtype))[:, None], st

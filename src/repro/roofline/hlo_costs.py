@@ -1,0 +1,323 @@
+"""Roll-up cost model over optimized (post-SPMD) HLO text.
+
+Why: xla's HloCostAnalysis (compiled.cost_analysis()) visits each while
+body ONCE — a scan-over-layers model is undercounted by n_layers x.  This
+parser rebuilds the computation call graph, extracts while trip counts
+from loop-condition constants, and rolls up:
+
+  flops        — dot/convolution FLOPs (elementwise ignored: <1% in LMs)
+  bytes        — HBM traffic model, FUSION-AWARE: the CPU backend leaves
+                 long elementwise chains unfused that TPU-XLA would fuse,
+                 so charging every op wildly overestimates HBM traffic.
+                 Instead we simulate fusion: only *materializing* ops
+                 (dot, fusion call-sites, reduce, slicing, collectives,
+                 layout ops) write their result to HBM; an elementwise op
+                 is free, and a materializing consumer charges one read
+                 per *materialized leaf* reachable through the elementwise
+                 chain feeding it (parameters count as leaves).
+                 Slicing ops keep HloCostAnalysis conventions: 2x the
+                 slice/update bytes, never the backing buffer.
+  collectives  — result bytes x transfer factor per op type
+
+All quantities are PER-DEVICE (the text is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(
+    r"(?:condition|body|to_apply|calls|branch_computations)="
+    r"(?:\{([^}]*)\}|(%[\w.\-]+))")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s+\(")
+_OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
+
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                "reduce-scatter": 1.0, "all-to-all": 1.0,
+                "collective-permute": 1.0, "ragged-all-to-all": 1.0}
+
+_SKIP_BYTES_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "iota", "after-all", "partition-id",
+                   "replica-id")
+
+
+def _shape_sizes(text: str) -> tuple[int, list[tuple[str, list[int]]]]:
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+def _dot_flops(result_shape, line: str, name2shape) -> float:
+    """2 * prod(result) * contracted size."""
+    dt, rdims = result_shape
+    out = 1
+    for d in rdims:
+        out *= d
+    m = re.search(r"dot\((%[\w.\-]+)", line)
+    c = 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if m and cm and m.group(1) in name2shape:
+        ldims = name2shape[m.group(1)][1]
+        for idx in cm.group(1).split(","):
+            if idx:
+                c *= ldims[int(idx)]
+    return 2.0 * out * c
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)  # (name, kind)
+
+
+def _parse_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if (hdr and not line.startswith(" ") and ") -> " in line
+                and line.rstrip().endswith("{")):
+            cur = hdr.group(1).lstrip("%")
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Max integer constant in the loop condition = trip count bound."""
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _comp_roots(comps: dict[str, list[str]]) -> dict[str, str]:
+    roots = {}
+    for name, lines in comps.items():
+        for ln in reversed(lines):
+            if "ROOT" in ln:
+                d = _DEF_RE.match(ln)
+                if d:
+                    m = re.match(r"((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)",
+                                 d.group(2))
+                    if m:
+                        roots[name] = m.group(2)
+                break
+    return roots
+
+
+# Ops that materialize their result in HBM (everything else is assumed
+# fused into its consumer by TPU-XLA).  Slicing ops are special-cased.
+_MATERIALIZE = frozenset({
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "sort",
+    "while", "conditional", "call", "custom-call", "rng",
+    "rng-bit-generator", "cholesky", "triangular-solve", "fft", "copy",
+    "transpose", "concatenate", "pad", "reverse", "copy-start",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "all-reduce-start",
+    "all-gather-start", "send", "recv", "infeed", "outfeed",
+})
+_SLICING = frozenset({"dynamic-slice", "gather", "slice",
+                      "dynamic-update-slice", "scatter"})
+_TRANSPARENT = frozenset({"get-tuple-element", "tuple", "bitcast",
+                          "optimization-barrier"})
+_FREE = frozenset({"constant", "iota", "after-all", "partition-id",
+                   "replica-id", "parameter"})
+
+
+def _nbytes(shape: tuple[str, list[int]]) -> float:
+    dt, dims = shape
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n * _DTYPE_BYTES.get(dt, 0))
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = _parse_computations(text)
+    roots = _comp_roots(comps)
+    costs: dict[str, CompCost] = {}
+    trips: dict[str, int] = {}   # body computation -> trip count
+
+    for name, lines in comps.items():
+        cc = CompCost()
+        name2shape: dict[str, tuple[str, list[int]]] = {}
+        insts: dict[str, tuple[str, float, list[str]]] = {}
+        fusion_target: dict[str, str] = {}
+        order: list[str] = []
+        root_var = None
+        for ln in lines:
+            d = _DEF_RE.match(ln)
+            if not d:
+                continue
+            var, rest = d.group(1), d.group(2)
+            if "ROOT" in ln.split("=", 1)[0]:
+                root_var = var
+            # result shape = first shape(s) on the line before the op name
+            m = re.match(r"((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)", rest)
+            if not m:
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            rbytes, rshapes = _shape_sizes(shape_str)
+            if rshapes:
+                name2shape[var] = rshapes[0]
+            om = re.search(r"\w[\w\-]*\(([^)]*)\)", rest)
+            operands = re.findall(r"%[\w.\-]+", om.group(1)) if om else []
+            insts[var] = (op, float(rbytes), operands)
+            order.append(var)
+            if op == "fusion":
+                fm = re.search(r"calls=(%[\w.\-]+)", ln)
+                if fm:
+                    fusion_target[var] = fm.group(1).lstrip("%")
+            # called computations
+            for cm in _CALLED_RE.finditer(ln):
+                grp = cm.group(1)
+                targets = ([t.strip().lstrip("%") for t in grp.split(",")]
+                           if grp else [cm.group(2).lstrip("%")])
+                kind = ln[cm.start():cm.start() + 9]
+                for tgt in targets:
+                    cc.calls.append((tgt, kind))
+            if op == "while":
+                bm = re.search(r"body=(%[\w.\-]+)", ln)
+                cm2 = re.search(r"condition=(%[\w.\-]+)", ln)
+                if bm and cm2:
+                    cond = cm2.group(1).lstrip("%")
+                    body = bm.group(1).lstrip("%")
+                    trips[body] = _trip_count(comps.get(cond, []))
+            # flops
+            if op == "dot":
+                cc.flops += _dot_flops(rshapes[0] if rshapes else
+                                       ("f32", []), ln, name2shape)
+            elif op == "convolution":
+                cc.flops += 2.0 * rbytes  # coarse: conv rare in our models
+            # collectives (result bytes x factor)
+            base_op = op.removesuffix("-start").removesuffix("-done")
+            if base_op in _COLL_FACTOR and not op.endswith("-done"):
+                cc.coll[base_op] = cc.coll.get(base_op, 0.0) \
+                    + rbytes * _COLL_FACTOR[base_op]
+
+        # ---- fusion-aware byte charging ----
+        def is_mat(var: str) -> bool:
+            if var not in insts:
+                return False
+            if var == root_var and insts[var][0] not in _TRANSPARENT \
+                    and insts[var][0] not in _FREE:
+                # non-tuple program/loop outputs are written (tuple roots
+                # are aliasing plumbing: the elements' producers already
+                # charged; fusion-body roots are excluded at roll-up)
+                return True
+            op = insts[var][0]
+            if op == "fusion":
+                return True
+            return op in _MATERIALIZE or op in _SLICING
+
+        def leaves(var: str, seen: set) -> float:
+            """Read-bytes of materialized leaves feeding `var` through
+            fused (elementwise/transparent) chains."""
+            if var in seen or var not in insts:
+                return 0.0
+            seen.add(var)
+            op, rbytes, operands = insts[var]
+            if op in ("constant", "iota", "after-all", "partition-id",
+                      "replica-id"):
+                return 0.0
+            if op == "get-tuple-element":
+                # reading ONE element of a (possibly huge) carry tuple
+                return rbytes
+            if op == "parameter" or is_mat(var):
+                return rbytes
+            if op in _TRANSPARENT:
+                return sum(leaves(o, seen) for o in operands)
+            # fused elementwise: read its own leaves
+            return sum(leaves(o, seen) for o in operands)
+
+        def slice_eff_op(var: str) -> str:
+            # DUS/DS-rooted fusions behave like the slicing op
+            rop = roots.get(fusion_target.get(var, ""), "")
+            return rop if rop in _SLICING else insts[var][0]
+
+        for var in order:
+            op, rbytes, operands = insts[var]
+            eff = slice_eff_op(var) if op == "fusion" else op
+            if eff in ("dynamic-slice", "gather", "slice"):
+                cc.bytes += 2.0 * rbytes      # read slice + write result
+                continue
+            if eff in ("dynamic-update-slice", "scatter"):
+                ub = rbytes
+                if len(operands) >= 2 and operands[1] in name2shape:
+                    ub = _nbytes(name2shape[operands[1]])
+                cc.bytes += 2.0 * min(ub, rbytes)
+                continue
+            if not is_mat(var):
+                continue                      # fused away: no HBM traffic
+            seen: set = set()
+            reads = sum(leaves(o, seen) for o in operands)
+            cc.bytes += rbytes + reads
+        costs[name] = cc
+
+    # roll up from ENTRY with while-trip multipliers (memoized DFS)
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def roll(name: str, stack=()) -> tuple[float, float, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in costs or name in stack:
+            return 0.0, 0.0, {}
+        cc = costs[name]
+        f, b, cl = cc.flops, cc.bytes, dict(cc.coll)
+        for tgt, kind in cc.calls:
+            tf, tb, tcl = roll(tgt, stack + (name,))
+            mult = trips.get(tgt, 1) if kind.startswith("body") else 1
+            f += tf * mult
+            # fusion internals are NOT HBM traffic (the fusion call site
+            # already charged its operands+result)
+            if not kind.startswith("calls"):
+                b += tb * mult
+            for k, v in tcl.items():
+                cl[k] = cl.get(k, 0.0) + v * mult
+        memo[name] = (f, b, cl)
+        return memo[name]
+
+    entry = None
+    for ln in text.splitlines():
+        if ln.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(ln[len("ENTRY "):])
+            if m:
+                entry = m.group(1).lstrip("%")
+            break
+    if entry is None or entry not in costs:
+        # fall back: computation with max flops
+        entry = max(costs, key=lambda n: costs[n].flops) if costs else None
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {}, "trips": {}}
+    f, b, cl = roll(entry)
+    per_comp = {n: c.bytes for n, c in costs.items() if c.bytes > 0}
+    return {"flops": f, "bytes": b, "collectives": cl, "trips": trips,
+            "per_comp_bytes": per_comp}

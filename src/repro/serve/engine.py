@@ -1,0 +1,110 @@
+"""Batched decode engine: prefill + step-wise generation with slot reuse.
+
+Continuous-batching-lite: a fixed pool of B slots; finished sequences
+free their slot and the next queued request is prefilled into it.  The
+decode step is one jit'd SPMD program over the whole pool (padded slots
+masked — implicit vector masking over the request dimension).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ArchConfig, params, batch: int = 8,
+                 max_len: int = 512, eos_id: int = 1, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.eos = eos_id
+        self.cache = D.init_cache(cfg, batch, max_len)
+        self.key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(
+            lambda p, c, t, pos: D.decode_step(p, cfg, c, t, pos))
+        self._queue: list[Request] = []
+        self._slots: list[Request | None] = [None] * batch
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _prefill_slot(self, slot: int, req: Request, tokens, pos):
+        """Feed the prompt token-by-token through decode_step (correct,
+        simple; a fused prefill kernel is the TPU fast path)."""
+        for t in req.prompt[:-1]:
+            tokens[slot] = t
+            logits, self.cache = self._step(
+                self.params, self.cache,
+                jnp.asarray(tokens)[:, None],
+                jnp.full((self.batch,), pos, jnp.int32))
+            pos += 1
+        tokens[slot] = req.prompt[-1]
+        return pos
+
+    def run(self) -> list[Request]:
+        """Lockstep pool decode (uniform positions). Simplification: all
+        pool members share a position counter; real deployments use
+        per-slot positions + paged caches."""
+        done: list[Request] = []
+        while self._queue:
+            active = self._queue[: self.batch]
+            self._queue = self._queue[self.batch:]
+            # pad the pool
+            while len(active) < self.batch:
+                active.append(Request(prompt=[self.eos], max_new=0))
+            tokens = np.zeros((self.batch,), np.int64)
+            plen = max(len(r.prompt) for r in active)
+            # right-align prompts into the shared position stream
+            toks = np.full((self.batch, plen), self.eos, np.int64)
+            for i, r in enumerate(active):
+                toks[i, plen - len(r.prompt):] = r.prompt
+            pos = 0
+            for j in range(plen - 1):
+                _, self.cache = self._step(
+                    self.params, self.cache, jnp.asarray(toks[:, j:j + 1]),
+                    jnp.full((self.batch,), pos, jnp.int32))
+                pos += 1
+            cur = jnp.asarray(toks[:, -1:])
+            max_new = max(r.max_new for r in active)
+            for _ in range(max_new):
+                logits, self.cache = self._step(
+                    self.params, self.cache, cur,
+                    jnp.full((self.batch,), pos, jnp.int32))
+                pos += 1
+                if any(r.temperature > 0 for r in active):
+                    self.key, sub = jax.random.split(self.key)
+                    nxt = jax.random.categorical(sub, logits)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1)
+                nxt_np = np.asarray(nxt)
+                for i, r in enumerate(active):
+                    if not r.done and len(r.out) < r.max_new:
+                        tok = int(nxt_np[i])
+                        r.out.append(tok)
+                        if tok == self.eos:
+                            r.done = True
+                cur = nxt[:, None]
+                if all(r.done or len(r.out) >= r.max_new for r in active):
+                    break
+            done.extend(r for r in active if r.max_new > 0)
+            # fresh cache per pool generation (slot-level reuse is the
+            # paged-cache extension)
+            self.cache = D.init_cache(self.cfg, self.batch, self.max_len)
+        return done

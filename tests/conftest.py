@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device; only
+repro.launch.dryrun (run as a subprocess) uses 512 placeholder devices."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_close(got, want, rtol=2e-2, atol=1e-5, name=""):
+    got = np.asarray(got, dtype=np.float64)
+    want = np.asarray(want, dtype=np.float64)
+    assert got.shape == want.shape, f"{name}: {got.shape} vs {want.shape}"
+    denom = np.max(np.abs(want)) + 1e-12
+    err = np.max(np.abs(got - want)) / denom
+    assert err < rtol, f"{name}: max rel err {err:.3e} >= {rtol}"

@@ -1,0 +1,96 @@
+"""Attention train-path implementations must agree (xla / chunked /
+banded, with and without sequence-parallel constraints, GQA grouping)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.ref as ref
+from repro.configs import get_smoke
+from repro.models import attention as attn
+
+from conftest import assert_close
+
+CFG = get_smoke("qwen3-14b")
+B, S = 2, 64
+
+
+def qkv(seed=0):
+    rng = np.random.default_rng(seed)
+    h, kv, dh = CFG.n_heads, CFG.n_kv, CFG.d_head
+    q = jnp.asarray(rng.standard_normal((B, S, h, dh)) * .3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, kv, dh)) * .3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, kv, dh)), jnp.float32)
+    return q, k, v
+
+
+def gqa_ref(q, k, v, causal=True):
+    """Expand kv heads to q heads and run the plain oracle."""
+    g = q.shape[2] // k.shape[2]
+    kf = jnp.repeat(k, g, axis=2)
+    vf = jnp.repeat(v, g, axis=2)
+    o = ref.mha(jnp.moveaxis(q, 2, 1), jnp.moveaxis(kf, 2, 1),
+                jnp.moveaxis(vf, 2, 1), causal=causal)
+    return jnp.moveaxis(o, 1, 2)
+
+
+@pytest.mark.parametrize("impl,extra", [
+    ("xla", {}),
+    ("chunked", {"attn_chunk": 16}),
+    ("chunked", {"attn_chunk": 64}),
+    ("banded", {"attn_bands": 4}),
+    ("banded", {"attn_bands": 8}),
+    ("chunked", {"attn_chunk": 16, "attn_sp": True}),
+    ("banded", {"attn_bands": 4, "attn_sp": True}),
+    ("banded", {"attn_bands": 4, "attn_chunk": 8}),   # inner chunking
+    ("banded", {"attn_bands": 2, "attn_chunk": 8}),
+])
+def test_attend_train_impl_equivalence(impl, extra):
+    cfg = dataclasses.replace(CFG, attn_impl=impl, **extra)
+    q, k, v = qkv()
+    got = jax.jit(lambda q, k, v: attn.attend_train(q, k, v, cfg))(q, k, v)
+    assert_close(got, gqa_ref(q, k, v), rtol=1e-4, name=impl)
+
+
+def test_attend_non_causal():
+    cfg = dataclasses.replace(CFG, attn_impl="xla")
+    q, k, v = qkv(1)
+    got = attn.attend_train(q, k, v, cfg, causal=False)
+    assert_close(got, gqa_ref(q, k, v, causal=False), rtol=1e-4)
+
+
+def test_chunked_non_divisible_seq():
+    """VLM prefix can make S a non-power-of-two: the chunk picker must
+    find a divisor (regression for the internvl2 dry-run failure)."""
+    cfg = dataclasses.replace(CFG, attn_impl="chunked", attn_chunk=48)
+    rng = np.random.default_rng(2)
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    s = 68   # 4 + 64, like prefix+tokens; divisors <= 48: 34
+    q = jnp.asarray(rng.standard_normal((B, s, h, dh)) * .3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, s, kv, dh)) * .3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, s, kv, dh)), jnp.float32)
+    got = attn.attend_train(q, k, v, cfg)
+    assert_close(got, gqa_ref(q, k, v), rtol=1e-4, name="nondiv")
+
+
+def test_decode_matches_train_row():
+    """attention_decode at position p equals row p of the train path."""
+    cfg = dataclasses.replace(CFG, attn_impl="xla")
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((B, 8, cfg.d_model)) * .1,
+                    jnp.float32)
+    p = attn.init_attention(jax.random.key(0), cfg)
+    pos = jnp.broadcast_to(jnp.arange(8), (B, 8))
+    want = attn.attention_train(p, cfg, x, pos)           # (B,8,D)
+
+    ck = jnp.zeros((B, 8, cfg.n_kv, cfg.d_head), jnp.float32)
+    cv = jnp.zeros_like(ck)
+    outs = []
+    for j in range(8):
+        o, ck, cv = attn.attention_decode(
+            p, cfg, x[:, j:j + 1], ck, cv, jnp.full((B,), j, jnp.int32))
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    assert_close(got, want, rtol=1e-3, name="decode-vs-train")

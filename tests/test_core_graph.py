@@ -1,0 +1,102 @@
+"""Region graphs (ordered dependences, F1/F2) + criticality planning (F5)."""
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.criticality import (RegionCost, dedicated_efficiency,
+                                    mxu_padded, plan_split)
+from repro.core.dependence import OrderedDep, Region, RegionGraph, fuse_scan
+
+
+def cholesky_graph():
+    return RegionGraph(
+        regions=[
+            Region("point", fn=None, critical=False),
+            Region("vector", fn=None, critical=False),
+            Region("matrix", fn=None, critical=True),
+        ],
+        deps=[
+            OrderedDep("point", "vector"),
+            # inva consumed by the whole shrinking matrix region:
+            OrderedDep("point", "matrix", cons_rate=Fraction(8),
+                       cons_stretch=Fraction(-1)),
+            OrderedDep("matrix", "point"),  # loop-carried
+        ],
+    )
+
+
+def test_graph_validates():
+    g = cholesky_graph()
+    assert g.critical.name == "matrix"
+
+
+def test_graph_rejects_unknown_region():
+    with pytest.raises(ValueError):
+        RegionGraph(regions=[Region("a", None, critical=True)],
+                    deps=[OrderedDep("a", "zzz")])
+
+
+def test_graph_requires_critical():
+    with pytest.raises(ValueError):
+        RegionGraph(regions=[Region("a", None)], deps=[])
+
+
+def test_inductive_consumption_rate():
+    d = OrderedDep("p", "m", cons_rate=Fraction(8),
+                   cons_stretch=Fraction(-1))
+    assert [d.consumptions_at(k) for k in range(10)] == \
+        [8, 7, 6, 5, 4, 3, 2, 1, 0, 0]
+    g = cholesky_graph()
+    assert g.total_consumptions(g.deps[1], 8) == 36
+
+
+def test_fuse_scan_is_scan():
+    """The FIFO-as-carry fusion: a chain a->b->a computed in one scan
+    equals the hand-unrolled loop."""
+
+    def step(carry, x):
+        inva = 1.0 / carry               # "point" region (non-critical)
+        new = carry + inva * x           # "matrix" region consumes inva
+        return new, inva
+
+    xs = jnp.arange(1.0, 6.0)
+    final, invas = fuse_scan(step, jnp.asarray(2.0), xs=xs)
+    c = 2.0
+    want = []
+    for x in np.arange(1.0, 6.0):
+        want.append(1.0 / c)
+        c = c + (1.0 / c) * x
+    np.testing.assert_allclose(np.asarray(invas), want, rtol=1e-6)
+    np.testing.assert_allclose(float(final), c, rtol=1e-6)
+
+
+# ---------------- criticality planning ----------------
+
+def test_plan_split_cholesky_shape():
+    regions = [
+        RegionCost("point", 2.0, has_transcendental=True),   # sqrt+div
+        RegionCost("vector", 10.0),
+        RegionCost("matrix", 100.0),
+    ]
+    crit, non = plan_split(regions)
+    assert "matrix" in crit
+    assert "point" in non
+
+
+def test_plan_split_always_one_critical():
+    regions = [RegionCost("a", 1.0, has_transcendental=True),
+               RegionCost("b", 1.0, has_transcendental=True)]
+    crit, non = plan_split(regions)
+    assert len(crit) == 1 and len(non) == 1
+
+
+def test_mxu_padding_and_efficiency():
+    assert mxu_padded(1) == 128
+    assert mxu_padded(128) == 128
+    assert mxu_padded(129) == 256
+    # the paper's Q9 argument: point regions on MXU tiles are ~1% utilized
+    assert dedicated_efficiency(1) == pytest.approx(1 / 128)
+    assert dedicated_efficiency(128) == 1.0

@@ -1,0 +1,205 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+B, S = 2, 32
+
+
+def make_batch(cfg: ArchConfig, b=B, s=S, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_prefix, cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.frontend == "audio":
+        batch["src_embeds"] = jnp.asarray(
+            rng.standard_normal((b, 16, cfg.d_model)) * 0.02, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_smoke(arch)
+    p = T.init_params(jax.random.key(0), cfg)
+    loss = jax.jit(lambda p, b: T.lm_loss(p, cfg, b))(p, make_batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # random-init loss should be ~ log(vocab)
+    assert float(loss) < np.log(cfg.vocab) + 2.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    p = T.init_params(jax.random.key(0), cfg)
+    opt = init_opt_state(p)
+    step = jax.jit(make_train_step(cfg, OptConfig(warmup=1, lr=1e-3)))
+    batch = make_batch(cfg)
+    p2, opt2, metrics = step(p, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    assert int(opt2["step"]) == 1
+    # params must actually move
+    moved = jax.tree.reduce(
+        lambda acc, x: acc + float(jnp.sum(jnp.abs(x))),
+        jax.tree.map(lambda a, b_: (a.astype(jnp.float32)
+                                    - b_.astype(jnp.float32)), p, p2), 0.0)
+    assert moved > 0.0
+    # pytree structure preserved (donation / checkpoint contract)
+    assert jax.tree.structure(p) == jax.tree.structure(p2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_shape(arch):
+    cfg = get_smoke(arch)
+    p = T.init_params(jax.random.key(0), cfg)
+    logits = jax.jit(lambda p, b: T.prefill(p, cfg, b))(p, make_batch(cfg))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke(arch)
+    p = T.init_params(jax.random.key(0), cfg)
+    cache = D.init_cache(cfg, B, max_len=S, src_len=16)
+    if cfg.family == "audio":
+        cache = D.warm_cache_audio(
+            p, cfg, cache, make_batch(cfg)["src_embeds"])
+    toks = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t, q: D.decode_step(p, cfg, c, t, q))(p, cache, toks,
+                                                           pos)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+    # cache shapes stable across steps (jit cache reuse contract)
+    for a, b_ in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)):
+        assert a.shape == b_.shape and a.dtype == b_.dtype
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "zamba2-2.7b",
+                                  "xlstm-125m", "seamless-m4t-large-v2"])
+def test_prefill_decode_consistency(arch):
+    """Token-by-token decode must reproduce the parallel (train-path)
+    forward — the KV cache / state recurrence is exact, not approximate."""
+    cfg = get_smoke(arch)
+    p = T.init_params(jax.random.key(1), cfg)
+    rng = np.random.default_rng(3)
+    s = 8
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (B, s)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.frontend == "audio":
+        batch["src_embeds"] = jnp.asarray(
+            rng.standard_normal((B, 16, cfg.d_model)) * 0.02, jnp.float32)
+    want = T.prefill(p, cfg, batch)                      # (B, V)
+
+    cache = D.init_cache(cfg, B, max_len=s, src_len=16)
+    if cfg.family == "audio":
+        cache = D.warm_cache_audio(p, cfg, cache, batch["src_embeds"])
+    step = jax.jit(lambda p, c, t, q: D.decode_step(p, cfg, c, t, q))
+    logits = None
+    for j in range(s):
+        logits, cache = step(p, cache, toks[:, j:j + 1],
+                             jnp.full((B,), j, jnp.int32))
+    got, want = np.asarray(logits), np.asarray(want)
+    err = np.max(np.abs(got - want)) / (np.max(np.abs(want)) + 1e-9)
+    assert err < 5e-2, f"decode diverges from prefill: rel err {err:.3e}"
+    # the *ranking* must agree (greedy decode equivalence)
+    assert (got.argmax(-1) == want.argmax(-1)).mean() >= 0.5
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    spec = {
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    }
+    for arch, (L, d, H, kv, dff, vocab) in spec.items():
+        cfg = get_config(arch)
+        if arch == "seamless-m4t-large-v2":
+            # 24L interpreted as 24 enc + 24 dec (DESIGN.md assumption)
+            assert cfg.enc_layers == 24 and cfg.dec_layers == 24
+        else:
+            assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == H, arch
+        assert cfg.n_kv == kv, arch
+        assert cfg.vocab == vocab, arch
+        if cfg.family == "moe":
+            assert cfg.moe.d_ff_expert == dff, arch
+        elif arch != "xlstm-125m":
+            assert cfg.d_ff == dff, arch
+    # MoE structure
+    assert get_config("dbrx-132b").moe.n_experts == 16
+    assert get_config("dbrx-132b").moe.top_k == 4
+    assert get_config("qwen2-moe-a2.7b").moe.n_experts == 60
+    assert get_config("qwen2-moe-a2.7b").moe.top_k == 4
+    assert get_config("qwen2-moe-a2.7b").moe.n_shared == 4
+    assert get_config("qwen3-14b").qk_norm
+    assert get_config("nemotron-4-15b").act == "sq_relu"
+    assert get_config("zamba2-2.7b").ssm.state == 64
+    assert get_config("seamless-m4t-large-v2").is_encdec
+
+
+def test_param_counts_in_range():
+    """Analytic parameter counts should land near the advertised sizes."""
+    expect = {
+        "phi3-medium-14b": (12e9, 16e9),
+        "qwen3-14b": (13e9, 16.5e9),
+        "nemotron-4-15b": (14e9, 17e9),
+        "phi4-mini-3.8b": (3.2e9, 4.6e9),
+        "zamba2-2.7b": (2.2e9, 3.3e9),
+        "xlstm-125m": (1.0e8, 1.7e8),
+        "dbrx-132b": (1.1e11, 1.45e11),
+        "internvl2-76b": (6.5e10, 8.5e10),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"
+    # MoE active < total
+    for arch in ("dbrx-132b", "qwen2-moe-a2.7b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_loss_decreases_tiny_lm():
+    """A few steps on the synthetic markov stream must reduce loss —
+    end-to-end learning sanity for the train path."""
+    cfg = get_smoke("phi4-mini-3.8b")
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                    global_batch=8, seed=0))
+    p = T.init_params(jax.random.key(0), cfg)
+    opt = init_opt_state(p)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-2, warmup=5)))
+    losses = []
+    for i in range(30):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        p, opt, m = step(p, opt, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[::3]

@@ -1,0 +1,164 @@
+"""Stream-descriptor IR: paper-claim checks (Figs. 10/11/21/22) and
+hypothesis property tests on the executable semantics."""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.streams import (StreamDescriptor, StreamDim,
+                                average_stream_length, command_count,
+                                commands_per_iteration, inductive, rect)
+
+
+# ---------------- constructors / classification ----------------
+
+def test_rect_capability():
+    assert rect(4).capability == "R"
+    assert rect(4, 8).capability == "RR"
+    assert rect(2, 3, 4).capability == "RRR"
+
+
+def test_inductive_capability():
+    s = inductive(outer_trip=8, inner_base=8, inner_stretch=-1)
+    assert s.capability == "RI"
+    assert s.dims[1].is_inductive
+
+
+def test_rect_row_major_addresses():
+    s = rect(3, 4)
+    assert list(s.addresses()) == list(range(12))
+
+
+def test_inductive_triangular_length():
+    # inner trip = n - j  (upper-triangular domain), n = 8
+    n = 8
+    s = inductive(outer_trip=n, inner_base=n, inner_stretch=-1)
+    assert s.length() == n * (n + 1) // 2
+    assert s.trip_counts() == [n - j for j in range(n)]
+
+
+def test_trip_clamps_at_zero():
+    s = inductive(outer_trip=6, inner_base=2, inner_stretch=-1)
+    # trips 2,1,0,0,0,0 -> never negative
+    assert s.trip_counts() == [2, 1, 0, 0, 0, 0]
+    assert s.length() == 3
+
+
+def test_fractional_stretch():
+    # vectorized-by-4 triangular stream: trip = ceil((8 - j)/1)/4 pattern
+    s = StreamDescriptor(dims=(
+        StreamDim(Fraction(4)),
+        StreamDim(Fraction(2), 1, (Fraction(-1, 2),)),
+    ))
+    assert s.trip_counts() == [2, 2, 1, 1]
+
+
+# ---------------- paper Fig. 11: solver command counts ----------------
+
+def solver_streams(n: int):
+    """The three inductive access streams of the triangular solver
+    (paper Fig. 11): reads of b, the inductive matrix walk of a, and the
+    inductive reuse of the divide output."""
+    a = inductive(outer_trip=n, inner_base=n - 1, inner_stretch=-1,
+                  outer_stride=n + 1, inner_stride=1, name="a")
+    b = rect(n, name="b")
+    x = inductive(outer_trip=n, inner_base=n - 1, inner_stretch=-1,
+                  name="x-reuse")
+    return [a, b, x]
+
+
+@pytest.mark.parametrize("n", [4, 8, 12, 16, 32])
+def test_solver_commands_ri_constant(n):
+    """RI capability: each solver stream is ONE command -> the paper's
+    '8 total' (3 streams + 5 fixed config/barrier commands) vs '3+5n'."""
+    streams = solver_streams(n)
+    ri = sum(command_count(s, "RI") for s in streams)
+    assert ri == 3                              # one command per stream
+    rr = sum(command_count(s, "RR") for s in streams)
+    assert rr == 2 * n + 1                      # inductive ones decompose
+    # paper's totals: fixed overhead of 5 commands either way
+    assert ri + 5 == 8
+    assert rr + 5 == 5 + 1 + 2 * n              # O(n) control insts
+
+
+@pytest.mark.parametrize("n", [8, 16, 32, 128])
+def test_ri_below_one_command_per_iter(n):
+    """Paper Fig. 22: RI always achieves < 1 control inst/iteration on the
+    FGOP (triangular) patterns."""
+    tri = inductive(outer_trip=n, inner_base=n, inner_stretch=-1)
+    assert commands_per_iteration(tri, "RI") < 1.0
+    assert commands_per_iteration(tri, "RI") <= \
+        commands_per_iteration(tri, "RR")
+    assert commands_per_iteration(tri, "RR") <= \
+        commands_per_iteration(tri, "V")
+
+
+@pytest.mark.parametrize("n", [16, 32, 128])
+def test_stream_length_ordering(n):
+    """Paper Fig. 21: average stream length grows with capability, and
+    inductive capability is what unlocks long streams on FGOP patterns."""
+    tri = inductive(outer_trip=n, inner_base=n, inner_stretch=-1)
+    lv = average_stream_length(tri, "V")
+    lr = average_stream_length(tri, "R")
+    lri = average_stream_length(tri, "RI")
+    assert lv <= lr <= lri
+    assert lri == tri.length()          # one command covers everything
+
+
+def test_gemm_rect_needs_no_induction():
+    """Regular workloads (GEMM) are fully served by RR (paper Q10)."""
+    g = rect(12, 64)
+    assert command_count(g, "RR") == 1
+    assert command_count(g, "RI") == 1
+
+
+# ---------------- property tests ----------------
+
+dim_st = st.integers(min_value=1, max_value=12)
+
+
+@given(nj=dim_st, ni=dim_st)
+@settings(max_examples=50, deadline=None)
+def test_rect_length_product(nj, ni):
+    s = rect(nj, ni)
+    assert s.length() == nj * ni
+    assert len(s.addresses()) == nj * ni
+
+
+@given(n=st.integers(min_value=1, max_value=16),
+       stretch=st.integers(min_value=-3, max_value=3),
+       base=st.integers(min_value=0, max_value=16))
+@settings(max_examples=80, deadline=None)
+def test_inductive_length_matches_sum(n, stretch, base):
+    s = inductive(outer_trip=n, inner_base=base, inner_stretch=stretch)
+    want = sum(max(0, base + stretch * j) for j in range(n))
+    assert s.length() == want
+
+
+@given(n=st.integers(min_value=1, max_value=10),
+       stretch=st.integers(min_value=-2, max_value=2),
+       base=st.integers(min_value=1, max_value=10),
+       cap=st.sampled_from(["R", "RR", "RI"]))
+@settings(max_examples=80, deadline=None)
+def test_decomposition_preserves_coverage(n, stretch, base, cap):
+    """Whatever the capability, the commands issued must cover exactly the
+    pattern's iteration space (command_count * avg length == length)."""
+    s = inductive(outer_trip=n, inner_base=base, inner_stretch=stretch)
+    c = command_count(s, cap)
+    assert c >= 1
+    # RI expresses any 2D inductive pattern in one command
+    if cap == "RI":
+        assert c == 1
+    # decomposed commands can never be fewer than the RI command
+    assert c >= command_count(s, "RI")
+
+
+@given(n=st.integers(min_value=2, max_value=12))
+@settings(max_examples=30, deadline=None)
+def test_addresses_unique_for_unit_stride_triangle(n):
+    """The triangular row-walk a[j*(n+1) + i] touches distinct addresses."""
+    s = inductive(outer_trip=n, inner_base=n, inner_stretch=-1,
+                  outer_stride=n + 1, inner_stride=1)
+    addrs = s.addresses()
+    assert len(np.unique(addrs)) == len(addrs)

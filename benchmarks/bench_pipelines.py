@@ -1,0 +1,122 @@
+"""Fused vs unfused solver pipelines — the composed-workload analog of the
+paper's Fig. 19 mechanism stack.
+
+Two axes are measured for cholesky_solve / qr_solve / mmse_equalize:
+
+  pallas-fused    one pallas_call, everything VMEM-resident (interpret
+                  mode off-TPU: the *relative* fused/unfused gap still
+                  reflects the dispatch + memory-round-trip overhead)
+  pallas-unfused  factor-then-solve via separate pallas_calls
+  xla-fused       ONE jit program of the whole chain (XLA may fuse)
+  xla-unfused     one jit + device round-trip PER stage — the
+                  kernel-at-a-time dispatch baseline
+
+plus a registry sweep: every registered kernel/pipeline timed through its
+uniform ``run_pallas`` adapter at its smallest size, with the stream
+capability (paper F2-F4 classification) emitted in the derived column —
+the registry, not a hand-maintained import list, enumerates the kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, timeit
+from repro import kernels as K
+from repro import pipelines as pp
+from repro.kernels import ref
+from repro.kernels.common import sample_spd as _spd
+
+LANES = 8
+SIZES = (8, 16, 32)          # >= 3 matrix sizes (paper's 12..32 range)
+RHS = 4
+
+
+# ---- xla-unfused: one jit + host sync per stage (dispatch baseline) ----
+
+_chol = jax.jit(jnp.linalg.cholesky)
+_fwd = jax.jit(jax.vmap(partial(jax.scipy.linalg.solve_triangular,
+                                lower=True)))
+_bwd = jax.jit(jax.vmap(partial(jax.scipy.linalg.solve_triangular,
+                                lower=False)))
+
+
+def chol_solve_xla_unfused(a, b):
+    l = jax.block_until_ready(_chol(a))
+    z = jax.block_until_ready(_fwd(l, b))
+    return _bwd(jnp.swapaxes(l, -1, -2), z)
+
+
+_gram = jax.jit(lambda h, s: jnp.einsum("bmi,bmj->bij", h, h)
+                + s * jnp.eye(h.shape[-1], dtype=h.dtype))
+_mf = jax.jit(lambda h, y: jnp.einsum("bmn,bmk->bnk", h, y))
+
+
+def mmse_xla_unfused(h, y, sigma2=0.1):
+    g = jax.block_until_ready(_gram(h, sigma2))
+    rhs = jax.block_until_ready(_mf(h, y))
+    return chol_solve_xla_unfused(g, rhs)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    for n in SIZES:
+        header(f"pipelines: cholesky_solve n={n} lanes={LANES}")
+        a = jnp.asarray(_spd(rng, LANES, n))
+        b = jnp.asarray(rng.standard_normal((LANES, n, RHS))
+                        .astype(np.float32))
+        want = np.asarray(ref.cholesky_solve(a, b))
+        got = np.asarray(pp.cholesky_solve_pallas(a, b))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-4)
+
+        t_fused = timeit(pp.cholesky_solve_pallas, a, b, reps=3, warmup=1)
+        t_unf = timeit(pp.cholesky_solve_unfused, a, b, reps=3, warmup=1)
+        emit(f"pipelines/chol_solve{n}/pallas-unfused", t_unf, "1.0x")
+        emit(f"pipelines/chol_solve{n}/pallas-fused", t_fused,
+             f"{t_unf / t_fused:.2f}x")
+        t_xf = timeit(partial(pp.cholesky_solve, backend="xla"), a, b)
+        t_xu = timeit(chol_solve_xla_unfused, a, b)
+        emit(f"pipelines/chol_solve{n}/xla-unfused", t_xu, "1.0x")
+        emit(f"pipelines/chol_solve{n}/xla-fused", t_xf,
+             f"{t_xu / t_xf:.2f}x")
+
+    for n in SIZES:
+        header(f"pipelines: qr_solve m={n + 4} n={n}")
+        a = jnp.asarray(rng.standard_normal((LANES, n + 4, n))
+                        .astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((LANES, n + 4, RHS))
+                        .astype(np.float32))
+        t_fused = timeit(pp.qr_solve_pallas, a, b, reps=3, warmup=1)
+        t_unf = timeit(pp.qr_solve_unfused, a, b, reps=3, warmup=1)
+        emit(f"pipelines/qr_solve{n}/pallas-unfused", t_unf, "1.0x")
+        emit(f"pipelines/qr_solve{n}/pallas-fused", t_fused,
+             f"{t_unf / t_fused:.2f}x")
+
+    for n in SIZES:
+        header(f"pipelines: mmse_equalize m={n + 4} n={n}")
+        h = jnp.asarray(rng.standard_normal((LANES, n + 4, n))
+                        .astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((LANES, n + 4, RHS))
+                        .astype(np.float32))
+        t_fused = timeit(pp.mmse_equalize_pallas, h, y, reps=3, warmup=1)
+        t_comp = timeit(pp.mmse_equalize_composed, h, y, reps=3, warmup=1)
+        emit(f"pipelines/mmse{n}/pallas-composed", t_comp, "1.0x")
+        emit(f"pipelines/mmse{n}/pallas-fused", t_fused,
+             f"{t_comp / t_fused:.2f}x")
+        t_xf = timeit(partial(pp.mmse_equalize, backend="xla"), h, y)
+        t_xu = timeit(mmse_xla_unfused, h, y)
+        emit(f"pipelines/mmse{n}/xla-unfused", t_xu, "1.0x")
+        emit(f"pipelines/mmse{n}/xla-fused", t_xf, f"{t_xu / t_xf:.2f}x")
+
+    # ---- registry sweep: uniform enumeration, no hand-imports ----
+    header("registry sweep (smallest size per kernel)")
+    for spec in K.specs():
+        n = spec.sizes[0]
+        args = spec.make_case(rng, n)
+        t = timeit(spec.run_pallas, *args, reps=3, warmup=1)
+        emit(f"registry/{spec.name}{n}/pallas", t,
+             f"{spec.kind},{spec.stream(n).capability}")

@@ -16,12 +16,13 @@ import time
 
 from benchmarks import (bench_control_overhead, bench_latency,
                         bench_masking_util, bench_mechanisms,
-                        bench_roofline, bench_throughput)
+                        bench_pipelines, bench_roofline, bench_throughput)
 
 MODULES = [
     ("control_overhead", bench_control_overhead),
     ("masking_util", bench_masking_util),
     ("mechanisms", bench_mechanisms),
+    ("pipelines", bench_pipelines),
     ("latency", bench_latency),
     ("throughput", bench_throughput),
     ("roofline", bench_roofline),

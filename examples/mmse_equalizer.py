@@ -1,0 +1,76 @@
+"""MMSE equalizer demo — the paper's 5G motivation served end to end.
+
+A batch of per-subcarrier complex MIMO channels is equalized with the
+FUSED mmse_equalize pipeline (GEMM + Cholesky + two substitutions in one
+kernel launch per lane), via the real expansion [[Re,-Im],[Im,Re]].  The
+same traffic is then pushed through serve.PipelineEngine the way a
+baseband service would: jobs in, lane-pooled grid launches, jobs out.
+
+Run:  PYTHONPATH=src python examples/mmse_equalizer.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pipelines import expand_complex_channel, mmse_equalize
+from repro.serve.engine import PipelineEngine, SolveJob
+
+ANTENNAS = 16        # receive antennas (paper sizes 12..32)
+STREAMS = 12         # spatial streams
+SUBCARRIERS = 24     # one pallas lane per subcarrier
+SNR_DB = 10.0
+
+
+def main():
+    rng = np.random.default_rng(0)
+    sigma2 = 10 ** (-SNR_DB / 10)
+    print(f"MMSE equalizer: {ANTENNAS}x{STREAMS} MIMO, "
+          f"{SUBCARRIERS} subcarriers, SNR {SNR_DB:.0f} dB")
+
+    # per-subcarrier complex channel + transmitted symbols
+    hr = rng.standard_normal((SUBCARRIERS, ANTENNAS, STREAMS)) \
+        .astype(np.float32)
+    hi = rng.standard_normal((SUBCARRIERS, ANTENNAS, STREAMS)) \
+        .astype(np.float32)
+    xr = rng.standard_normal((SUBCARRIERS, STREAMS, 1)).astype(np.float32)
+    xi = rng.standard_normal((SUBCARRIERS, STREAMS, 1)).astype(np.float32)
+
+    # y = H x + noise (complex, expanded to real)
+    yr = hr @ xr - hi @ xi + np.sqrt(sigma2) * rng.standard_normal(
+        (SUBCARRIERS, ANTENNAS, 1)).astype(np.float32)
+    yi = hr @ xi + hi @ xr + np.sqrt(sigma2) * rng.standard_normal(
+        (SUBCARRIERS, ANTENNAS, 1)).astype(np.float32)
+
+    h, y = expand_complex_channel(jnp.asarray(hr), jnp.asarray(hi),
+                                  jnp.asarray(yr), jnp.asarray(yi))
+
+    t0 = time.perf_counter()
+    xhat = mmse_equalize(h, y, sigma2=sigma2)
+    jax.block_until_ready(xhat)
+    dt = time.perf_counter() - t0
+    xhat = np.asarray(xhat)
+    xhat_r, xhat_i = xhat[:, :STREAMS], xhat[:, STREAMS:]
+    nmse = ((np.linalg.norm(xhat_r - xr) ** 2
+             + np.linalg.norm(xhat_i - xi) ** 2)
+            / (np.linalg.norm(xr) ** 2 + np.linalg.norm(xi) ** 2))
+    print(f"  direct call: {SUBCARRIERS} subcarriers in "
+          f"{dt * 1e3:.2f} ms (incl. compile), NMSE={nmse:.3e}")
+
+    # --- the same traffic through the serving engine ---
+    eng = PipelineEngine("mmse_equalize", lanes=8, sigma2=sigma2)
+    jobs = [eng.submit(SolveJob(args=(np.asarray(h[i]), np.asarray(y[i]))))
+            for i in range(SUBCARRIERS)]
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    served = np.stack([j.out for j in jobs])
+    print(f"  PipelineEngine: {len(jobs)} jobs in {dt * 1e3:.2f} ms, "
+          f"max |direct - served| = "
+          f"{np.abs(served - xhat).max():.2e}")
+    print("equalizer OK.")
+
+
+if __name__ == "__main__":
+    main()

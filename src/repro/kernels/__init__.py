@@ -1,8 +1,32 @@
-"""Pallas TPU kernels for the REVEL/FGOP reproduction.
+"""Pallas TPU kernels for the REVEL/FGOP reproduction, plus the kernel
+registry — the single enumeration point for tests, benchmarks, and serve.
 
 Layout: <name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the
-jit'd backend-dispatching wrappers, ref.py the pure-jnp oracles.
+jit'd backend-dispatching wrappers, ref.py the pure-jnp oracles, and
+repro.pipelines the fused multi-stage solver chains.  Every kernel and
+pipeline registers a ``KernelSpec`` binding together its Pallas entry
+point, its oracle, its characteristic stream descriptor
+(repro.core.streams — the paper's F2-F4 classification), and a
+deterministic case generator, so consumers iterate ``specs()`` instead of
+hand-importing each kernel:
+
+    for spec in repro.kernels.specs():
+        args = spec.make_case(rng, n)
+        assert close(spec.run_pallas(*args), spec.run_oracle(*args))
+
+The registry is built lazily on first access: repro.pipelines imports
+kernel modules, so eager registration here would be circular.
 """
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import sample_spd as _spd
 from repro.kernels.ops import (  # noqa: F401
     cholesky,
     trisolve,
@@ -14,3 +38,269 @@ from repro.kernels.ops import (  # noqa: F401
     flash_attention,
     ssm_scan,
 )
+
+__all__ = ["cholesky", "trisolve", "qr", "svd", "gemm", "fir", "fft",
+           "flash_attention", "ssm_scan", "KernelSpec", "register", "get",
+           "names", "specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel or pipeline.
+
+    ``pallas`` is the raw Pallas entry point (kwargs like block sizes or
+    ``sweeps`` remain available to callers); ``run_pallas``/``run_oracle``
+    are signature-aligned adapters used for uniform oracle checking — both
+    accept the arrays produced by ``make_case(rng, n)`` and return
+    comparable pytrees.  ``stream`` maps a problem size to the kernel's
+    characteristic StreamDescriptor (paper F2-F4); ``sizes`` is the
+    default sweep for registry-driven tests/benchmarks.
+    """
+
+    name: str
+    pallas: Callable
+    oracle: Callable
+    run_pallas: Callable
+    run_oracle: Callable
+    make_case: Callable
+    stream: Callable
+    sizes: tuple[int, ...]
+    rtol: float = 1e-4
+    kind: str = "kernel"          # "kernel" | "pipeline"
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+_BUILT = False
+_LOCK = threading.Lock()
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate kernel registration: {spec.name!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+
+
+def _build() -> None:
+    """Populate the registry (idempotent, thread-safe, atomic: a failed
+    build clears the partial state so the root-cause error — not a
+    misleading duplicate-registration one — resurfaces on every call)."""
+    global _BUILT
+    with _LOCK:
+        if _BUILT:
+            return
+        try:
+            _register_all()
+        except BaseException:
+            _REGISTRY.clear()
+            raise
+        _BUILT = True
+
+
+def _register_all() -> None:
+    from repro.core.streams import inductive, rect
+    from repro.kernels import ref
+    from repro.kernels.attention import flash_attention_pallas
+    from repro.kernels.cholesky import cholesky_pallas
+    from repro.kernels.fft import fft_pallas
+    from repro.kernels.fir import fir_pallas
+    from repro.kernels.qr import qr_pallas
+    from repro.kernels.ssm_scan import ssm_scan_pallas
+    from repro.kernels.svd import svd_pallas
+    from repro.kernels.trisolve import trisolve_pallas
+    from repro import pipelines as pp
+
+    tri_ri = lambda n: inductive(outer_trip=n, inner_base=n,
+                                 inner_stretch=-1)
+
+    # ---------------- factorizations ----------------
+    register(KernelSpec(
+        name="cholesky", pallas=cholesky_pallas, oracle=ref.cholesky,
+        run_pallas=lambda a: cholesky_pallas(a),
+        run_oracle=lambda a: ref.cholesky(a),
+        make_case=lambda rng, n: (jnp.asarray(_spd(rng, 2, n)),),
+        stream=tri_ri, sizes=(8, 12, 16, 24, 32)))
+
+    def _tri_case(rng, n):
+        l = np.linalg.cholesky(_spd(rng, 2, n))
+        b = rng.standard_normal((2, n, 3)).astype(np.float32)
+        return jnp.asarray(l), jnp.asarray(b)
+
+    register(KernelSpec(
+        name="trisolve", pallas=trisolve_pallas, oracle=ref.trisolve,
+        run_pallas=lambda l, b: trisolve_pallas(l, b, lower=True),
+        run_oracle=lambda l, b: ref.trisolve(l, b, lower=True),
+        make_case=_tri_case, stream=tri_ri, sizes=(8, 12, 16, 24, 32),
+        rtol=1e-3))
+
+    register(KernelSpec(
+        name="qr", pallas=qr_pallas, oracle=ref.qr,
+        run_pallas=lambda a: qr_pallas(a),
+        run_oracle=lambda a: ref.qr(a),
+        make_case=lambda rng, n: (jnp.asarray(
+            rng.standard_normal((2, n + 4, n)).astype(np.float32)),),
+        stream=tri_ri, sizes=(8, 12, 16, 24)))
+
+    def _svd_sigmas(a):
+        _, s, _ = svd_pallas(a, sweeps=14)
+        return jnp.sort(s, axis=-1)[:, ::-1]
+
+    register(KernelSpec(
+        name="svd", pallas=svd_pallas, oracle=ref.svd_vals,
+        run_pallas=_svd_sigmas,
+        run_oracle=lambda a: ref.svd_vals(a),
+        make_case=lambda rng, n: (jnp.asarray(
+            rng.standard_normal((2, n + 4, n)).astype(np.float32)),),
+        stream=lambda n: inductive(outer_trip=n, inner_base=n - 1,
+                                   inner_stretch=-1),
+        sizes=(8, 12, 16), rtol=1e-3))
+
+    # ---------------- dense / DSP ----------------
+    from repro.kernels import ops as _ops
+    from repro.kernels.gemm import gemm_pallas
+
+    register(KernelSpec(
+        name="gemm", pallas=gemm_pallas,
+        oracle=ref.gemm,
+        run_pallas=lambda x, y: _ops.gemm(x, y, backend="pallas"),
+        run_oracle=lambda x, y: ref.gemm(x, y),
+        make_case=lambda rng, n: (
+            jnp.asarray(rng.standard_normal((4 * n, 4 * n))
+                        .astype(np.float32)),
+            jnp.asarray(rng.standard_normal((4 * n, 4 * n))
+                        .astype(np.float32))),
+        stream=lambda n: rect(4 * n, 4 * n), sizes=(16, 32)))
+
+    def _fir_case(rng, n):
+        x = rng.standard_normal((16 * n,)).astype(np.float32)
+        h = rng.standard_normal((9,)).astype(np.float32)
+        h = (h + h[::-1]) / 2
+        return jnp.asarray(x), jnp.asarray(h)
+
+    register(KernelSpec(
+        name="fir", pallas=fir_pallas, oracle=ref.fir,
+        run_pallas=lambda x, h: _ops.fir(x, h, backend="pallas"),
+        run_oracle=lambda x, h: ref.fir(x, h),
+        make_case=_fir_case,
+        stream=lambda n: rect(16 * n - 8, 9), sizes=(8, 16, 32)))
+
+    register(KernelSpec(
+        name="fft", pallas=fft_pallas, oracle=ref.fft,
+        run_pallas=lambda xr, xi: fft_pallas(xr, xi),
+        run_oracle=lambda xr, xi: ref.fft(xr, xi),
+        make_case=lambda rng, n: (
+            jnp.asarray(rng.standard_normal((2, n)).astype(np.float32)),
+            jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))),
+        stream=lambda n: rect(int(np.log2(n)), n // 2),
+        sizes=(64, 128), rtol=1e-3))
+
+    # ---------------- LM-side ----------------
+    def _attn_case(rng, n):
+        s, d = 128, 64
+        mk = lambda sc: jnp.asarray(
+            (rng.standard_normal((1, 2, s, d)) * sc).astype(np.float32))
+        return mk(0.3), mk(0.3), mk(1.0)
+
+    register(KernelSpec(
+        name="flash_attention", pallas=flash_attention_pallas,
+        oracle=ref.mha,
+        run_pallas=lambda q, k, v: flash_attention_pallas(
+            q, k, v, causal=True),
+        run_oracle=lambda q, k, v: ref.mha(q, k, v, causal=True),
+        make_case=_attn_case,
+        stream=lambda n: inductive(outer_trip=n, inner_base=1,
+                                   inner_stretch=1),
+        sizes=(128,), rtol=1e-3))
+
+    def _ssm_case(rng, n):
+        b, h, nn, p = 1, 2, 8, 4
+        return (jnp.asarray(rng.standard_normal((b, h, n, p))
+                            .astype(np.float32)),
+                jnp.asarray(rng.uniform(0.8, 0.999, (b, h, n))
+                            .astype(np.float32)),
+                jnp.asarray(rng.standard_normal((b, n, nn))
+                            .astype(np.float32)),
+                jnp.asarray(rng.standard_normal((b, n, nn))
+                            .astype(np.float32)))
+
+    def _ssm_oracle(x, a, b, c):
+        y, hf = ref.ssm_scan(jnp.moveaxis(x, 1, 2),
+                             jnp.moveaxis(a, 1, 2), b, c)
+        return jnp.moveaxis(y, 1, 2), hf
+
+    register(KernelSpec(
+        name="ssm_scan", pallas=ssm_scan_pallas, oracle=ref.ssm_scan,
+        run_pallas=lambda x, a, b, c: ssm_scan_pallas(
+            x, a, b, c, chunk=16),
+        run_oracle=_ssm_oracle,
+        make_case=_ssm_case,
+        stream=lambda n: rect(n // 16, 16), sizes=(64,), rtol=1e-3))
+
+    # ---------------- fused solver pipelines ----------------
+    def _chol_solve_case(rng, n):
+        a = jnp.asarray(_spd(rng, 2, n))
+        b = jnp.asarray(rng.standard_normal((2, n, 3))
+                        .astype(np.float32))
+        return a, b
+
+    register(KernelSpec(
+        name="cholesky_solve", pallas=pp.cholesky_solve_pallas,
+        oracle=ref.cholesky_solve,
+        run_pallas=lambda a, b: pp.cholesky_solve_pallas(a, b),
+        run_oracle=lambda a, b: ref.cholesky_solve(a, b),
+        make_case=_chol_solve_case, stream=tri_ri,
+        sizes=(8, 12, 16, 24, 32), kind="pipeline"))
+
+    def _qr_solve_case(rng, n):
+        a = jnp.asarray(rng.standard_normal((2, n + 4, n))
+                        .astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((2, n + 4, 2))
+                        .astype(np.float32))
+        return a, b
+
+    register(KernelSpec(
+        name="qr_solve", pallas=pp.qr_solve_pallas,
+        oracle=ref.qr_solve,
+        run_pallas=lambda a, b: pp.qr_solve_pallas(a, b),
+        run_oracle=lambda a, b: ref.qr_solve(a, b),
+        make_case=_qr_solve_case, stream=tri_ri,
+        sizes=(8, 12, 16, 24, 32), kind="pipeline"))
+
+    def _mmse_case(rng, n):
+        h = jnp.asarray(rng.standard_normal((2, n + 4, n))
+                        .astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((2, n + 4, 2))
+                        .astype(np.float32))
+        return h, y
+
+    register(KernelSpec(
+        name="mmse_equalize", pallas=pp.mmse_equalize_pallas,
+        oracle=ref.mmse_equalize,
+        run_pallas=lambda h, y: pp.mmse_equalize_pallas(h, y,
+                                                        sigma2=0.1),
+        run_oracle=lambda h, y: ref.mmse_equalize(h, y, sigma2=0.1),
+        make_case=_mmse_case, stream=tri_ri,
+        sizes=(8, 12, 16, 24, 32), kind="pipeline"))
+
+
+def get(name: str) -> KernelSpec:
+    _build()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def names(kind: str | None = None) -> list[str]:
+    _build()
+    return [n for n, s in _REGISTRY.items()
+            if kind is None or s.kind == kind]
+
+
+def specs(kind: str | None = None) -> list[KernelSpec]:
+    _build()
+    return [s for s in _REGISTRY.values()
+            if kind is None or s.kind == kind]

@@ -16,9 +16,28 @@ import functools
 import os
 
 import jax
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["interpret_default", "on_tpu", "resolve_backend", "cdiv",
-           "round_up"]
+           "round_up", "tpu_compiler_params", "sample_spd"]
+
+
+def sample_spd(rng, b: int, n: int):
+    """Batched well-conditioned SPD test matrices (B,N,N) float32 — the
+    shared generator for registry cases, benchmarks, and tests."""
+    import numpy as np
+    a = rng.standard_normal((b, n, n)).astype(np.float32)
+    return a @ a.swapaxes(-1, -2) + n * np.eye(n, dtype=np.float32)
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4/0.5; resolve
+# whichever this jaxlib ships so kernels stay version-portable.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable pltpu compiler-params constructor."""
+    return _COMPILER_PARAMS_CLS(**kwargs)
 
 
 @functools.cache

@@ -62,6 +62,32 @@ def svd_vals(a: jax.Array) -> jax.Array:
     return jnp.linalg.svd(a, compute_uv=False)
 
 
+# ---------------- composed solver pipelines ----------------
+
+def cholesky_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """SPD solve a @ x = b, the unfused library path.
+    a: (B,N,N), b: (B,N,M)."""
+    return jnp.linalg.solve(a, b)
+
+
+def qr_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Least squares min ||a x - b||, full-rank tall a.
+    a: (B,M,N), b: (B,M,K) -> (B,N,K)."""
+    q, r = jnp.linalg.qr(a)          # reduced
+    qtb = jnp.einsum("bmn,bmk->bnk", q, b)
+    return jax.vmap(lambda ri, bi: jax.scipy.linalg.solve_triangular(
+        ri, bi, lower=False))(r, qtb)
+
+
+def mmse_equalize(h: jax.Array, y: jax.Array, *,
+                  sigma2: float = 0.1) -> jax.Array:
+    """LMMSE x = (H^T H + s I)^{-1} H^T y.  h: (B,M,N), y: (B,M,K)."""
+    n = h.shape[-1]
+    g = jnp.einsum("bmi,bmj->bij", h, h) + sigma2 * jnp.eye(n, dtype=h.dtype)
+    rhs = jnp.einsum("bmn,bmk->bnk", h, y)
+    return jnp.linalg.solve(g, rhs)
+
+
 # ---------------- dense / DSP ----------------
 
 def gemm(x: jax.Array, y: jax.Array) -> jax.Array:

@@ -159,7 +159,7 @@ def moe_a2a(p, x, cfg_moe, norm_w=None, eps=1e-5):
         P("model", "data", None),                          # wg
         P("model", None, "data"),                          # wo (E,F,D)
     )
-    fn = jax.shard_map(
+    fn = shd.shard_map(
         local, mesh=mesh,
         in_specs=in_specs,
         out_specs=(tok_spec, P()),

@@ -1,0 +1,46 @@
+"""Fused solver pipelines — composed FGOP workloads as single kernels.
+
+The paper's REVEL results (Figs. 13-19) are per-kernel, but its wireless
+motivation (§1, Fig. 4) is a *chain*: in a 5G MMSE receiver every
+subcarrier runs channel-Gram GEMM -> Cholesky -> forward solve -> back
+solve -> combine, thousands of times per slot.  Fine-grain ordered
+parallelism is exactly what lets those stages overlap without spilling
+the (12..32-antenna sized) matrices to memory between them.  This package
+provides those chains as first-class single-``pallas_call`` kernels, one
+lane (grid cell) per subcarrier/problem:
+
+  cholesky_solve  — factor + both substitutions fused (the chain of paper
+                    Fig. 5 [Cholesky regions] and Fig. 9 [Solver's
+                    inductive a/b edge]); forward substitution interleaved
+                    into the factor loop at column granularity.
+  qr_solve        — Householder least squares (paper Fig. 6 left) with
+                    Q^T b applied reflector-by-reflector (never forming
+                    Q) + fused back substitution — the `tau` ordered edge
+                    consumed by two critical regions per iteration.
+  mmse_equalize   — the full 5G use case: H^T H + sigma^2 I (GEMM,
+                    Fig. 7), fused Cholesky solve, matched-filter GEMM;
+                    x = (H^H H + s I)^{-1} H^H y per subcarrier.
+
+Each pipeline ships three faces (mirroring repro.kernels): the fused
+Pallas kernel (``*_pallas``), an unfused multi-``pallas_call`` baseline
+(``*_unfused`` / ``*_composed``) whose HBM round-trips quantify the
+fusion win in benchmarks/bench_pipelines.py, and a jit'd dispatching
+wrapper.  All are registered in the kernel registry
+(``repro.kernels.get/names/specs``) next to the primitive kernels, so
+tests, benchmarks, and the serve engine enumerate them uniformly.
+"""
+from repro.pipelines.cholesky_solve import (cholesky_solve,  # noqa: F401
+                                            cholesky_solve_pallas,
+                                            cholesky_solve_unfused)
+from repro.pipelines.mmse import (expand_complex_channel,  # noqa: F401
+                                  mmse_equalize, mmse_equalize_composed,
+                                  mmse_equalize_pallas)
+from repro.pipelines.qr_solve import (qr_solve,  # noqa: F401
+                                      qr_solve_pallas, qr_solve_unfused)
+
+__all__ = [
+    "cholesky_solve", "cholesky_solve_pallas", "cholesky_solve_unfused",
+    "qr_solve", "qr_solve_pallas", "qr_solve_unfused",
+    "mmse_equalize", "mmse_equalize_pallas", "mmse_equalize_composed",
+    "expand_complex_channel",
+]

@@ -1,0 +1,177 @@
+"""Fused SPD solve: Cholesky factor + forward + back substitution in ONE
+Pallas grid cell (paper Figs. 5/9/13 chained as a single ordered region).
+
+The REVEL win the paper measures is not a lone factorization — it is the
+*chain* factor -> forward-solve -> back-solve executed without the matrix
+ever round-tripping through memory.  Here one grid cell = one lane: the
+matrix and right-hand sides stay VMEM-resident across all three stages,
+and the forward substitution is interleaved *inside* the factor loop — as
+soon as column k of L is finished (the ordered dependence), the divide +
+AXPY of the forward solve for row k consume it.  The fori_loop carry is
+REVEL's inter-region FIFO.
+
+Numerics: only the lower triangle of A is read (the inductive-domain mask,
+paper Feature 4 — verified by the NaN-poisoning test), and the pivot is
+guarded by ``eps`` so singular/ill-conditioned systems produce finite
+output instead of NaN lanes.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cholesky import cholesky_pallas
+from repro.kernels.common import interpret_default, resolve_backend
+from repro.kernels.trisolve import trisolve_pallas
+
+# Relative pivot threshold (LAPACK pstrf-style): a pivot below
+# eps * max(diag(A)) marks a numerically deficient direction.  Residual
+# pivots of an exactly singular float32 matrix land around
+# n * ulp * ||A|| ~ 1e-6 * scale, so 1e-5 cleanly separates "deficient"
+# from merely ill-conditioned.
+DEFAULT_EPS = 1e-5
+
+
+def pivot_threshold(a, rows, *, eps: float):
+    """Scale-relative deficiency threshold from the initial diagonal."""
+    diag = jnp.where(rows[:, None] == rows[None, :], a, -jnp.inf)
+    return jnp.maximum(eps * jnp.max(diag), 1e-30)
+
+
+def factor_forward_step(k, a, y, rows, thresh):
+    """One fused outer iteration: finish column k of L, then immediately
+    run the forward-substitution step that consumes it.
+
+    a: (n, n) working matrix (lower triangle -> L in place)
+    y: (n, m) right-hand sides being forward-solved in place
+    thresh: scalar deficiency threshold (see pivot_threshold)
+
+    A pivot below ``thresh`` takes the rank-deficient path: unit diagonal,
+    zeroed column, zeroed solution component — the solve proceeds on the
+    numerically non-deficient subspace and every lane stays finite.
+    """
+    # ---- point region (non-critical): guarded rsqrt of the pivot ----
+    akk = a[k, k]
+    ok = akk > thresh
+    inv = jnp.where(ok, jax.lax.rsqrt(jnp.maximum(akk, thresh)), 0.0)
+    # ---- vector region: scale column k; diagonal set to the pivot ----
+    col = a[:, k] * inv
+    col = jnp.where(rows == k, jnp.where(ok, akk * inv, 1.0), col)
+    col = jnp.where(rows >= k, col, 0.0)              # implicit mask (F4)
+    # ---- matrix region (critical): masked rank-1 trailing update ----
+    live = rows > k
+    upd = col[:, None] * col[None, :]
+    mask = live[:, None] & live[None, :]
+    a = a - jnp.where(mask, upd, 0.0)
+    a = a.at[:, k].set(jnp.where(rows >= k, col, a[:, k]))
+    # ---- fused forward substitution consuming the finished column ----
+    # y[k] /= l[k,k];  y[j>k] -= l[j,k] * y[k]   (divide + masked AXPY)
+    yk = y[k] * inv                                   # deficient: x_k = 0
+    y = y.at[k].set(yk)
+    y = y - jnp.where(live[:, None], col[:, None] * yk[None, :], 0.0)
+    return a, y
+
+
+def back_substitution_step(i, l, y, rows, *, n: int):
+    """Back-substitution outer iteration on U = L^T, k = n-1-i:
+    x[k] = y[k] / l[k,k];  y[j<k] -= l[k,j] * x[k]."""
+    k = n - 1 - i
+    xk = y[k] / l[k, k]                   # diagonal already >= sqrt(eps)
+    y = y.at[k].set(xk)
+    row = l[k, :]                         # l[k, j] valid for j <= k
+    return y - jnp.where(rows[:, None] < k, row[:, None] * xk[None, :], 0.0)
+
+
+def _cholesky_solve_kernel(a_ref, b_ref, x_ref, *l_refs, n: int,
+                           eps: float):
+    a = a_ref[0]
+    y = b_ref[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    # symmetrize from the lower triangle: the upper half is never read
+    # (garbage/NaN lanes there cannot leak into the solve)
+    tril = rows[:, None] >= rows[None, :]
+    a = jnp.where(tril, a, a.T)
+    thresh = pivot_threshold(a, rows, eps=eps)
+
+    a, y = jax.lax.fori_loop(
+        0, n,
+        lambda k, c: factor_forward_step(k, c[0], c[1], rows, thresh),
+        (a, y))
+    y = jax.lax.fori_loop(
+        0, n, lambda i, y_: back_substitution_step(i, a, y_, rows, n=n), y)
+    x_ref[0] = y
+    if l_refs:                    # factor output requested (return_l)
+        l_refs[0][0] = jnp.where(tril, a, 0.0)
+
+
+def cholesky_solve_pallas(a: jax.Array, b: jax.Array, *,
+                          eps: float = DEFAULT_EPS,
+                          interpret: bool | None = None,
+                          return_l: bool = False):
+    """Solve a @ x = b for SPD a. a: (B,N,N), b: (B,N,M) -> x (B,N,M).
+
+    One pallas_call; factor and both substitutions fused per lane.  With
+    ``return_l`` also returns the Cholesky factor (it is VMEM-resident
+    anyway; without the flag no factor output is declared at all, so the
+    hot serving path never pays the extra HBM write).
+    """
+    bsz, n, n2 = a.shape
+    b2, n3, m = b.shape
+    assert n == n2 == n3 and bsz == b2, (a.shape, b.shape)
+    if interpret is None:
+        interpret = interpret_default()
+    out_specs = [pl.BlockSpec((1, n, m), lambda i: (i, 0, 0),
+                              memory_space=pltpu.VMEM)]
+    out_shape = [jax.ShapeDtypeStruct((bsz, n, m), b.dtype)]
+    if return_l:
+        out_specs.append(pl.BlockSpec((1, n, n), lambda i: (i, 0, 0),
+                                      memory_space=pltpu.VMEM))
+        out_shape.append(jax.ShapeDtypeStruct((bsz, n, n), a.dtype))
+    out = pl.pallas_call(
+        functools.partial(_cholesky_solve_kernel, n=n, eps=eps),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, n, m), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a, b)
+    return (out[0], out[1]) if return_l else out[0]
+
+
+def cholesky_solve_unfused(a: jax.Array, b: jax.Array, *,
+                           interpret: bool | None = None) -> jax.Array:
+    """The no-fusion baseline: factor-then-solve via THREE separate
+    pallas_calls — the matrix round-trips through HBM between regions.
+    Same math; this is what bench_pipelines compares against."""
+    l = cholesky_pallas(a, interpret=interpret)
+    z = trisolve_pallas(l, b, lower=True, interpret=interpret)
+    return trisolve_pallas(jnp.swapaxes(l, -1, -2), z, lower=False,
+                           interpret=interpret)
+
+
+def _cholesky_solve_xla(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused-at-XLA-level fallback (one jit program, library factor)."""
+    l = jnp.linalg.cholesky(a)
+    z = jax.vmap(partial(jax.scipy.linalg.solve_triangular, lower=True)
+                 )(l, b)
+    return jax.vmap(partial(jax.scipy.linalg.solve_triangular, lower=False)
+                    )(jnp.swapaxes(l, -1, -2), z)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def cholesky_solve(a: jax.Array, b: jax.Array, *,
+                   backend: str | None = None) -> jax.Array:
+    """Public wrapper with backend dispatch (pallas on TPU, xla off)."""
+    if resolve_backend(backend) == "pallas":
+        return cholesky_solve_pallas(a, b)
+    return _cholesky_solve_xla(a, b)

@@ -1,0 +1,135 @@
+"""Fused least squares: Householder QR + implicit Q^T b + back
+substitution in ONE Pallas grid cell (paper Fig. 6 chained with Fig. 9).
+
+The fusion is structural, not just spatial: Q is never formed.  Each
+reflector (v, tau) — the non-critical point/vector region — is applied to
+the trailing columns of R *and* to the right-hand sides in the same outer
+iteration (two critical MXU-shaped regions sharing one produced value:
+the paper's inductive-consumption `tau` edge).  After min(m-1, n)
+reflections the rhs holds Q^T b, and the back substitution on the n x n
+upper triangle of R runs in the same kernel, everything VMEM-resident.
+
+Pivot guard: a degenerate (zero-norm) column takes tau = 0 (identity
+reflector) and the back substitution divides by a clamped diagonal, so
+rank-deficient systems stay finite.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default, resolve_backend
+from repro.kernels.qr import qr_pallas
+from repro.kernels.trisolve import trisolve_pallas
+
+DEFAULT_TINY = 1e-20
+
+
+def reflect_step(k, r, y, rows, *, tiny: float = DEFAULT_TINY):
+    """One fused outer iteration: build reflector k, apply to R and rhs."""
+    # ---- householder region (non-critical: norm, sqrt, div) ----
+    x = jnp.where(rows >= k, r[:, k], 0.0)            # masked column (F4)
+    xk = r[k, k]
+    norm = jnp.sqrt(jnp.sum(x * x))
+    alpha = jnp.where(xk >= 0, -norm, norm)
+    v = x - alpha * (rows == k).astype(r.dtype)
+    vnorm2 = jnp.maximum(jnp.sum(v * v), tiny)
+    tau = jnp.where(norm < tiny, 0.0, 2.0 / vnorm2)   # degenerate: skip
+    # ---- critical region 1: R update (v^T R then rank-1) ----
+    r = r - v[:, None] * (tau * (v @ r))[None, :]
+    # ---- critical region 2 (fused solve): rhs <- (I - tau v v^T) rhs ----
+    y = y - v[:, None] * (tau * (v @ y))[None, :]
+    return r, y
+
+
+def _qr_solve_kernel(a_ref, b_ref, x_ref, *, m: int, n: int,
+                     tiny: float):
+    r = a_ref[0]                                      # (m, n)
+    y = b_ref[0]                                      # (m, k)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    nref = min(n, m - 1) if m > 1 else 0
+
+    r, y = jax.lax.fori_loop(
+        0, nref, lambda k, c: reflect_step(k, c[0], c[1], rows, tiny=tiny),
+        (r, y))
+
+    # ---- back substitution on R[:n,:n] x = (Q^T b)[:n] ----
+    rows_n = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    z = y[:n]
+    # relative deficiency threshold from R's diagonal: a pivot below it
+    # marks a numerically dependent column, whose solution component is
+    # ZEROED (clamping the divisor instead would overflow float32: with
+    # R = [[0,1],[0,0]] a clamped 1/tiny cascades to inf through the
+    # remaining rows)
+    diag = jnp.abs(jnp.where(rows_n[:, None] == rows_n[None, :],
+                             r[:n], 0.0).sum(axis=1))
+    thresh = jnp.maximum(1e-6 * jnp.max(diag), tiny)
+
+    def bwd(i, z):
+        k = n - 1 - i
+        rkk = r[k, k]
+        ok = jnp.abs(rkk) > thresh
+        xk = jnp.where(ok, z[k] / jnp.where(ok, rkk, 1.0), 0.0)
+        z = z.at[k].set(xk)
+        col = jnp.where(rows_n < k, r[:n, k], 0.0)
+        return z - col[:, None] * xk[None, :]
+
+    x_ref[0] = jax.lax.fori_loop(0, n, bwd, z)
+
+
+def qr_solve_pallas(a: jax.Array, b: jax.Array, *,
+                    tiny: float = DEFAULT_TINY,
+                    interpret: bool | None = None) -> jax.Array:
+    """Least squares min ||a @ x - b||. a: (B,M,N) with M >= N,
+    b: (B,M,K) -> x: (B,N,K).  One pallas_call, Q never materialized."""
+    bsz, m, n = a.shape
+    b2, m2, k = b.shape
+    assert m == m2 and bsz == b2 and m >= n, (a.shape, b.shape)
+    if interpret is None:
+        interpret = interpret_default()
+    return pl.pallas_call(
+        functools.partial(_qr_solve_kernel, m=m, n=n, tiny=tiny),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, m, n), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, n, k), lambda i: (i, 0, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((bsz, n, k), b.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def qr_solve_unfused(a: jax.Array, b: jax.Array, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """No-fusion baseline: explicit Q via qr_pallas, a GEMM for Q^T b, and
+    a separate triangular-solve pallas_call (three HBM round-trips)."""
+    q, r = qr_pallas(a, interpret=interpret)
+    n = a.shape[-1]
+    qtb = jnp.einsum("bmk,bmj->bkj", q, b)[:, :n, :]
+    return trisolve_pallas(r[:, :n, :n], qtb, lower=False,
+                           interpret=interpret)
+
+
+def _qr_solve_xla(a: jax.Array, b: jax.Array) -> jax.Array:
+    q, r = jnp.linalg.qr(a)                          # reduced: (B,M,N)
+    qtb = jnp.einsum("bmn,bmk->bnk", q, b)
+    return jax.vmap(partial(jax.scipy.linalg.solve_triangular,
+                            lower=False))(r, qtb)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def qr_solve(a: jax.Array, b: jax.Array, *,
+             backend: str | None = None) -> jax.Array:
+    """Public wrapper with backend dispatch (pallas on TPU, xla off)."""
+    if resolve_backend(backend) == "pallas":
+        return qr_solve_pallas(a, b)
+    return _qr_solve_xla(a, b)

@@ -72,7 +72,9 @@ def _dot_flops(result_shape, line: str, name2shape) -> float:
     out = 1
     for d in rdims:
         out *= d
-    m = re.search(r"dot\((%[\w.\-]+)", line)
+    # operands may be typed ("dot(f32[64,128]{1,0} %lhs, ...)") or bare
+    # ("dot(%lhs, ...)") depending on the HLO printer version
+    m = re.search(r"dot\([^%)]*(%[\w.\-]+)", line)
     c = 1
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     if m and cm and m.group(1) in name2shape:

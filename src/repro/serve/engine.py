@@ -1,13 +1,22 @@
-"""Batched decode engine: prefill + step-wise generation with slot reuse.
+"""Batched serving engines: LM decode (DecodeEngine) and solver pipelines
+(PipelineEngine).
 
-Continuous-batching-lite: a fixed pool of B slots; finished sequences
-free their slot and the next queued request is prefilled into it.  The
-decode step is one jit'd SPMD program over the whole pool (padded slots
-masked — implicit vector masking over the request dimension).
+DecodeEngine is continuous-batching-lite: a fixed pool of B slots;
+finished sequences free their slot and the next queued request is
+prefilled into it.  The decode step is one jit'd SPMD program over the
+whole pool (padded slots masked — implicit vector masking over the
+request dimension).
+
+PipelineEngine serves the registry's fused solver pipelines (5G-style
+equalization traffic): jobs are grouped by problem shape, padded to the
+lane-pool size, and dispatched as ONE pallas grid per group — the same
+lane model the paper's REVEL uses for per-subcarrier matrices.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -107,4 +116,75 @@ class DecodeEngine:
             # fresh cache per pool generation (slot-level reuse is the
             # paged-cache extension)
             self.cache = D.init_cache(self.cfg, self.batch, self.max_len)
+        return done
+
+
+# ---------------- solver-pipeline serving ----------------
+
+@dataclasses.dataclass
+class SolveJob:
+    """One solver problem: ``args`` are the per-problem arrays WITHOUT the
+    batch dimension (e.g. cholesky_solve: (a (N,N), b (N,M)));
+    ``out`` is filled by PipelineEngine.run()."""
+    args: tuple
+    out: np.ndarray | None = None
+
+
+class PipelineEngine:
+    """Batched solver service over a registered pipeline.
+
+    Jobs are grouped by problem shape, stacked, padded to the ``lanes``
+    pool size with identity problems (masked lanes — their results are
+    discarded), and executed as one grid launch per group.  ``pipeline``
+    is any ``kind="pipeline"`` name in the kernel registry; extra
+    keyword ``options`` (e.g. ``sigma2`` for mmse_equalize) are bound
+    into the served kernel.
+    """
+
+    def __init__(self, pipeline: str = "cholesky_solve", lanes: int = 8,
+                 **options):
+        from repro import kernels as K
+        self.spec = K.get(pipeline)
+        if self.spec.kind != "pipeline":
+            raise ValueError(f"{pipeline!r} is a {self.spec.kind}, "
+                             "not a servable pipeline")
+        self.lanes = lanes
+        self._queue: list[SolveJob] = []
+        self._fn = jax.jit(functools.partial(self.spec.pallas, **options))
+
+    def submit(self, job: SolveJob) -> SolveJob:
+        self._queue.append(job)
+        return job
+
+    def _pad_group(self, stacked: list[np.ndarray]) -> list[np.ndarray]:
+        """Pad the batch dim to a multiple of the lane count with benign
+        problems (identity matrix / zero rhs) so padded lanes stay
+        finite and cannot contaminate real lanes."""
+        b = stacked[0].shape[0]
+        pad = (-b) % self.lanes
+        if pad == 0:
+            return stacked
+        out = []
+        for arr in stacked:
+            filler = np.zeros((pad,) + arr.shape[1:], arr.dtype)
+            if filler.ndim == 3 and filler.shape[1] == filler.shape[2]:
+                filler += np.eye(filler.shape[1], dtype=arr.dtype)
+            out.append(np.concatenate([arr, filler], axis=0))
+        return out
+
+    def run(self) -> list[SolveJob]:
+        done: list[SolveJob] = []
+        groups: dict[tuple, list[SolveJob]] = collections.defaultdict(list)
+        for job in self._queue:
+            key = tuple(a.shape for a in job.args)
+            groups[key].append(job)
+        self._queue = []
+        for jobs in groups.values():
+            stacked = [np.stack([np.asarray(j.args[i]) for j in jobs])
+                       for i in range(len(jobs[0].args))]
+            padded = self._pad_group(stacked)
+            res = np.asarray(self._fn(*[jnp.asarray(p) for p in padded]))
+            for i, job in enumerate(jobs):
+                job.out = res[i]
+            done.extend(jobs)
         return done

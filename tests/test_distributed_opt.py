@@ -21,7 +21,7 @@ def test_compressed_psum_under_shard_map():
     e = {"w": jnp.zeros((16, 16), jnp.float32)}
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shd.shard_map, mesh=mesh,
         in_specs=(P(), P()), out_specs=(P(), P()))
     def allreduce(g, e):
         return compressed_psum(g, "pod", e)

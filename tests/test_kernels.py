@@ -1,23 +1,29 @@
 """Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle in
 ref.py, swept over shapes and dtypes.  These are the paper's seven DSP
-workloads + the two LM-side kernels (flash attention, SSM scan)."""
+workloads + the two LM-side kernels (flash attention, SSM scan).
+
+Kernels are fetched from the registry (repro.kernels.get) — the single
+enumeration point — instead of a hand-maintained import list; the
+registry-driven auto-discovery sweep lives in test_pipelines.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 import repro.kernels.ref as ref
-from repro.kernels.attention import flash_attention_pallas
-from repro.kernels.cholesky import cholesky_pallas
-from repro.kernels.fft import fft_pallas
-from repro.kernels.fir import fir_pallas
-from repro.kernels.gemm import gemm_pallas
-from repro.kernels.qr import qr_pallas
-from repro.kernels.ssm_scan import ssm_scan_pallas
-from repro.kernels.svd import svd_pallas
-from repro.kernels.trisolve import trisolve_pallas
+from repro import kernels as K
 
 from conftest import assert_close
+
+cholesky_pallas = K.get("cholesky").pallas
+trisolve_pallas = K.get("trisolve").pallas
+qr_pallas = K.get("qr").pallas
+svd_pallas = K.get("svd").pallas
+gemm_pallas = K.get("gemm").pallas
+fir_pallas = K.get("fir").pallas
+fft_pallas = K.get("fft").pallas
+flash_attention_pallas = K.get("flash_attention").pallas
+ssm_scan_pallas = K.get("ssm_scan").pallas
 
 RNG = np.random.default_rng(1234)
 

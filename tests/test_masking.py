@@ -1,10 +1,18 @@
 """Implicit vector masking (paper F4): mask generators agree with the
-stream-descriptor semantics, and the utilization model matches brute force."""
+stream-descriptor semantics, and the utilization model matches brute force.
+
+hypothesis is optional: the properties always run over a deterministic
+parametrized grid; an installed hypothesis adds fuzzed variants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.masking import (lane_mask, masked_fill, tail_mask, tri_mask,
                                 vector_utilization)
@@ -60,10 +68,7 @@ def test_vector_utilization_triangular():
     assert vector_utilization([4, 3, 2, 1], 4) == pytest.approx(10 / 16)
 
 
-@given(n=st.integers(min_value=1, max_value=32),
-       w=st.sampled_from([2, 4, 8, 16]))
-@settings(max_examples=60, deadline=None)
-def test_utilization_matches_bruteforce(n, w):
+def _check_utilization_matches_bruteforce(n, w):
     tri = inductive(outer_trip=n, inner_base=n, inner_stretch=-1)
     trips = tri.trip_counts()
     got = vector_utilization(trips, w)
@@ -73,10 +78,7 @@ def test_utilization_matches_bruteforce(n, w):
     assert 0.0 < got <= 1.0
 
 
-@given(n=st.integers(min_value=1, max_value=16),
-       w=st.sampled_from([4, 8]))
-@settings(max_examples=40, deadline=None)
-def test_masking_beats_padding_scalarization(n, w):
+def _check_masking_beats_padding_scalarization(n, w):
     """Masked execution issues ceil(t/w)*w lanes; scalar fallback issues
     t*w lane-slots (1 useful lane per issue).  Masking is never worse."""
     tri = inductive(outer_trip=n, inner_base=n, inner_stretch=-1)
@@ -84,3 +86,29 @@ def test_masking_beats_padding_scalarization(n, w):
     masked_issued = sum(-(-t // w) * w for t in trips)
     scalar_issued = sum(t * w for t in trips)
     assert masked_issued <= scalar_issued
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 13, 21, 32])
+@pytest.mark.parametrize("w", [2, 4, 8, 16])
+def test_utilization_matches_bruteforce(n, w):
+    _check_utilization_matches_bruteforce(n, w)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 9, 16])
+@pytest.mark.parametrize("w", [4, 8])
+def test_masking_beats_padding_scalarization(n, w):
+    _check_masking_beats_padding_scalarization(n, w)
+
+
+if HAVE_HYPOTHESIS:
+    @given(n=st.integers(min_value=1, max_value=32),
+           w=st.sampled_from([2, 4, 8, 16]))
+    @settings(max_examples=60, deadline=None)
+    def test_utilization_matches_bruteforce_fuzzed(n, w):
+        _check_utilization_matches_bruteforce(n, w)
+
+    @given(n=st.integers(min_value=1, max_value=16),
+           w=st.sampled_from([4, 8]))
+    @settings(max_examples=40, deadline=None)
+    def test_masking_beats_padding_scalarization_fuzzed(n, w):
+        _check_masking_beats_padding_scalarization(n, w)

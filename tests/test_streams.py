@@ -1,10 +1,20 @@
 """Stream-descriptor IR: paper-claim checks (Figs. 10/11/21/22) and
-hypothesis property tests on the executable semantics."""
+property tests on the executable semantics.
+
+hypothesis is optional: when present, the properties are fuzzed over the
+full strategy space; without it the same properties run over a
+deterministic parametrized grid, so the tier-1 suite collects and passes
+either way."""
 from fractions import Fraction
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.streams import (StreamDescriptor, StreamDim,
                                 average_stream_length, command_count,
@@ -114,34 +124,23 @@ def test_gemm_rect_needs_no_induction():
 
 
 # ---------------- property tests ----------------
+# Each property lives in a _check_* helper; a deterministic parametrized
+# grid always runs it, and (when hypothesis is installed) a fuzzed
+# variant widens the coverage.
 
-dim_st = st.integers(min_value=1, max_value=12)
-
-
-@given(nj=dim_st, ni=dim_st)
-@settings(max_examples=50, deadline=None)
-def test_rect_length_product(nj, ni):
+def _check_rect_length_product(nj, ni):
     s = rect(nj, ni)
     assert s.length() == nj * ni
     assert len(s.addresses()) == nj * ni
 
 
-@given(n=st.integers(min_value=1, max_value=16),
-       stretch=st.integers(min_value=-3, max_value=3),
-       base=st.integers(min_value=0, max_value=16))
-@settings(max_examples=80, deadline=None)
-def test_inductive_length_matches_sum(n, stretch, base):
+def _check_inductive_length_matches_sum(n, stretch, base):
     s = inductive(outer_trip=n, inner_base=base, inner_stretch=stretch)
     want = sum(max(0, base + stretch * j) for j in range(n))
     assert s.length() == want
 
 
-@given(n=st.integers(min_value=1, max_value=10),
-       stretch=st.integers(min_value=-2, max_value=2),
-       base=st.integers(min_value=1, max_value=10),
-       cap=st.sampled_from(["R", "RR", "RI"]))
-@settings(max_examples=80, deadline=None)
-def test_decomposition_preserves_coverage(n, stretch, base, cap):
+def _check_decomposition_preserves_coverage(n, stretch, base, cap):
     """Whatever the capability, the commands issued must cover exactly the
     pattern's iteration space (command_count * avg length == length)."""
     s = inductive(outer_trip=n, inner_base=base, inner_stretch=stretch)
@@ -154,11 +153,64 @@ def test_decomposition_preserves_coverage(n, stretch, base, cap):
     assert c >= command_count(s, "RI")
 
 
-@given(n=st.integers(min_value=2, max_value=12))
-@settings(max_examples=30, deadline=None)
-def test_addresses_unique_for_unit_stride_triangle(n):
+def _check_addresses_unique_for_unit_stride_triangle(n):
     """The triangular row-walk a[j*(n+1) + i] touches distinct addresses."""
     s = inductive(outer_trip=n, inner_base=n, inner_stretch=-1,
                   outer_stride=n + 1, inner_stride=1)
     addrs = s.addresses()
     assert len(np.unique(addrs)) == len(addrs)
+
+
+@pytest.mark.parametrize("nj,ni", [(1, 1), (1, 12), (3, 4), (7, 5),
+                                   (12, 12)])
+def test_rect_length_product(nj, ni):
+    _check_rect_length_product(nj, ni)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 16])
+@pytest.mark.parametrize("stretch", [-3, -1, 0, 1, 3])
+@pytest.mark.parametrize("base", [0, 1, 7, 16])
+def test_inductive_length_matches_sum(n, stretch, base):
+    _check_inductive_length_matches_sum(n, stretch, base)
+
+
+@pytest.mark.parametrize("n", [1, 3, 10])
+@pytest.mark.parametrize("stretch", [-2, -1, 0, 1, 2])
+@pytest.mark.parametrize("base", [1, 4, 10])
+@pytest.mark.parametrize("cap", ["R", "RR", "RI"])
+def test_decomposition_preserves_coverage(n, stretch, base, cap):
+    _check_decomposition_preserves_coverage(n, stretch, base, cap)
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8, 12])
+def test_addresses_unique_for_unit_stride_triangle(n):
+    _check_addresses_unique_for_unit_stride_triangle(n)
+
+
+if HAVE_HYPOTHESIS:
+    dim_st = st.integers(min_value=1, max_value=12)
+
+    @given(nj=dim_st, ni=dim_st)
+    @settings(max_examples=50, deadline=None)
+    def test_rect_length_product_fuzzed(nj, ni):
+        _check_rect_length_product(nj, ni)
+
+    @given(n=st.integers(min_value=1, max_value=16),
+           stretch=st.integers(min_value=-3, max_value=3),
+           base=st.integers(min_value=0, max_value=16))
+    @settings(max_examples=80, deadline=None)
+    def test_inductive_length_matches_sum_fuzzed(n, stretch, base):
+        _check_inductive_length_matches_sum(n, stretch, base)
+
+    @given(n=st.integers(min_value=1, max_value=10),
+           stretch=st.integers(min_value=-2, max_value=2),
+           base=st.integers(min_value=1, max_value=10),
+           cap=st.sampled_from(["R", "RR", "RI"]))
+    @settings(max_examples=80, deadline=None)
+    def test_decomposition_preserves_coverage_fuzzed(n, stretch, base, cap):
+        _check_decomposition_preserves_coverage(n, stretch, base, cap)
+
+    @given(n=st.integers(min_value=2, max_value=12))
+    @settings(max_examples=30, deadline=None)
+    def test_addresses_unique_for_unit_stride_triangle_fuzzed(n):
+        _check_addresses_unique_for_unit_stride_triangle(n)

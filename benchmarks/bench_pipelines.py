@@ -15,9 +15,15 @@ plus a registry sweep: every registered kernel/pipeline timed through its
 uniform ``run_pallas`` adapter at its smallest size, with the stream
 capability (paper F2-F4 classification) emitted in the derived column —
 the registry, not a hand-maintained import list, enumerates the kernels.
+
+``run_slo()`` (wired separately in benchmarks.run) measures the serving
+layer: a mixed cholesky/qr/mmse trace through the SolverMux, emitting
+per-pipeline p50/p99 latency, throughput, lane utilization, and
+padded-lane waste — the SLO surface of the multiplexed lane pools.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -120,3 +126,72 @@ def run() -> None:
         t = timeit(spec.run_pallas, *args, reps=3, warmup=1)
         emit(f"registry/{spec.name}{n}/pallas", t,
              f"{spec.kind},{spec.stream(n).capability}")
+
+
+# ---- SLO / mixed-traffic serving (SolverMux) ----
+
+SLO_LANES = 8
+SLO_SIZES = (8, 12)            # two distinct shapes per pipeline
+SLO_ROUNDS = 6
+
+
+def _slo_trace(rng):
+    """Interleaved PUSCH-style mix: per round, MMSE bulk at every size
+    plus control-path Cholesky and QR jobs — three job types, >= 2
+    shapes each, arriving interleaved (never pre-grouped)."""
+    trace = []
+    for _ in range(SLO_ROUNDS):
+        for n in SLO_SIZES:
+            m = n + 4
+            for _ in range(3):
+                trace.append(("mmse_equalize", (
+                    rng.standard_normal((m, n)).astype(np.float32),
+                    rng.standard_normal((m, 2)).astype(np.float32))))
+            trace.append(("cholesky_solve", (
+                _spd(rng, 1, n)[0],
+                rng.standard_normal((n, 2)).astype(np.float32))))
+            trace.append(("qr_solve", (
+                rng.standard_normal((m, n)).astype(np.float32),
+                rng.standard_normal((m, 1)).astype(np.float32))))
+    return trace
+
+
+def run_slo() -> None:
+    """Mixed-traffic SLO scenario: per-pipeline p50/p99 latency,
+    throughput, lane utilization, and padded-lane waste through the
+    registry-driven SolverMux (real clock; a warmup pass absorbs jit
+    compiles so the percentiles reflect steady-state serving)."""
+    from repro.serve import SolverMux
+
+    rng = np.random.default_rng(7)
+    trace = _slo_trace(rng)
+    mux = SolverMux(lanes=SLO_LANES)
+
+    header(f"serve SLO: mixed traffic, {len(trace)} jobs, "
+           f"lanes={SLO_LANES}, sizes={SLO_SIZES}")
+    for pipeline, args in trace:          # warmup: compile every bucket
+        mux.submit(pipeline, *args)
+    mux.run()
+    mux.reset_metrics()
+
+    t0 = time.perf_counter()
+    for pipeline, args in trace:
+        mux.submit(pipeline, *args, deadline=time.monotonic() + 5e-3)
+    done = mux.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == len(trace)
+
+    snap = mux.metrics()
+    for name, st in sorted(snap.pipelines.items()):
+        emit(f"serve_slo/{name}/latency_p50", st.latency.p50 * 1e6,
+             f"p99={st.latency.p99 * 1e6:.0f}us,n={st.jobs}")
+        emit(f"serve_slo/{name}/latency_p99", st.latency.p99 * 1e6,
+             f"max={st.latency.max * 1e6:.0f}us")
+        emit(f"serve_slo/{name}/throughput", 1e6 / st.throughput,
+             f"{st.throughput:.0f} jobs/s")
+        emit(f"serve_slo/{name}/lane_util",
+             st.lane_utilization * 100.0,
+             f"waste={st.padded_lane_waste * 100:.0f}%,"
+             f"launches={st.launches}")
+    emit("serve_slo/total", wall * 1e6,
+         f"{snap.total_jobs} jobs,{snap.total_launches} launches")

@@ -1,4 +1,4 @@
-"""Benchmark driver: one module per paper table/figure.
+"""Benchmark driver: one entry per paper table/figure or subsystem.
 
   fig11/21/22  control-overhead analytics   bench_control_overhead
   fig2         masking utilization          bench_masking_util
@@ -6,6 +6,7 @@
   fig16        latency-optimized kernels    bench_latency
   fig17        throughput-optimized         bench_throughput
   roofline     3-term table from dry-run    bench_roofline
+  serving      mixed-traffic SLO (mux)      bench_pipelines.run_slo
 
 Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters."""
 from __future__ import annotations
@@ -18,14 +19,15 @@ from benchmarks import (bench_control_overhead, bench_latency,
                         bench_masking_util, bench_mechanisms,
                         bench_pipelines, bench_roofline, bench_throughput)
 
-MODULES = [
-    ("control_overhead", bench_control_overhead),
-    ("masking_util", bench_masking_util),
-    ("mechanisms", bench_mechanisms),
-    ("pipelines", bench_pipelines),
-    ("latency", bench_latency),
-    ("throughput", bench_throughput),
-    ("roofline", bench_roofline),
+ENTRIES = [
+    ("control_overhead", bench_control_overhead.run),
+    ("masking_util", bench_masking_util.run),
+    ("mechanisms", bench_mechanisms.run),
+    ("pipelines", bench_pipelines.run),
+    ("serve_slo", bench_pipelines.run_slo),
+    ("latency", bench_latency.run),
+    ("throughput", bench_throughput.run),
+    ("roofline", bench_roofline.run),
 ]
 
 
@@ -35,10 +37,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     t0 = time.time()
-    for name, mod in MODULES:
+    for name, fn in ENTRIES:
         if args.only and args.only not in name:
             continue
-        mod.run()
+        fn()
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -55,6 +55,13 @@ class KernelSpec:
     comparable pytrees.  ``stream`` maps a problem size to the kernel's
     characteristic StreamDescriptor (paper F2-F4); ``sizes`` is the
     default sweep for registry-driven tests/benchmarks.
+
+    ``filler`` is the spec's benign-padding descriptor for lane-pooled
+    serving: ``filler(shapes, dtypes)`` — per-lane (unbatched) arg shapes
+    and dtypes — returns one well-conditioned problem (e.g. identity
+    system, zero rhs) whose result padded lanes can safely discard.  The
+    serving engines pad exclusively from this declaration; a spec without
+    one cannot be served padded.
     """
 
     name: str
@@ -67,6 +74,16 @@ class KernelSpec:
     sizes: tuple[int, ...]
     rtol: float = 1e-4
     kind: str = "kernel"          # "kernel" | "pipeline"
+    filler: Callable | None = None
+
+    def run_oracle_lane(self, *args):
+        """Oracle answer for ONE unbatched problem: adds the batch dim,
+        runs the ``run_oracle`` adapter, strips it again — the serving
+        stack's per-job spot check (a lane is an unbatched problem)."""
+        import jax
+        batched = [np.asarray(a)[None] for a in args]
+        return jax.tree.map(lambda x: np.asarray(x)[0],
+                            self.run_oracle(*batched))
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -143,14 +160,20 @@ def _register_all() -> None:
             rng.standard_normal((2, n + 4, n)).astype(np.float32)),),
         stream=tri_ri, sizes=(8, 12, 16, 24)))
 
-    def _svd_sigmas(a):
-        _, s, _ = svd_pallas(a, sweeps=14)
-        return jnp.sort(s, axis=-1)[:, ::-1]
+    def _svd_adapter(a):
+        """Reconstruction-based oracle adapter (ROADMAP registry-coverage
+        item): check the sorted spectrum AND that U diag(S) V^T rebuilds
+        A — one-sided Jacobi guarantees A V = U S, so reconstruction is
+        exact up to float32 rounding and catches U/V corruption that a
+        singular-values-only check cannot."""
+        u, s, v = svd_pallas(a, sweeps=14)
+        recon = jnp.einsum("bmn,bn,bkn->bmk", u, s, v)
+        return jnp.sort(s, axis=-1)[:, ::-1], recon
 
     register(KernelSpec(
         name="svd", pallas=svd_pallas, oracle=ref.svd_vals,
-        run_pallas=_svd_sigmas,
-        run_oracle=lambda a: ref.svd_vals(a),
+        run_pallas=_svd_adapter,
+        run_oracle=lambda a: (ref.svd_vals(a), a),
         make_case=lambda rng, n: (jnp.asarray(
             rng.standard_normal((2, n + 4, n)).astype(np.float32)),),
         stream=lambda n: inductive(outer_trip=n, inner_base=n - 1,
@@ -239,6 +262,17 @@ def _register_all() -> None:
         stream=lambda n: rect(n // 16, 16), sizes=(64,), rtol=1e-3))
 
     # ---------------- fused solver pipelines ----------------
+    def _identity_system_filler(shapes, dtypes):
+        """Benign padding lane for (matrix, rhs) solver pipelines: an
+        identity(-embedded) matrix and a zero right-hand side.  Works for
+        square SPD systems (cholesky_solve) and tall least-squares /
+        channel matrices (qr_solve, mmse_equalize): eye(m, n) is full
+        rank with unit singular values, so padded lanes stay perfectly
+        conditioned and solve to exactly zero."""
+        (m, n), rhs_shape = shapes
+        return (np.eye(m, n, dtype=dtypes[0]),
+                np.zeros(rhs_shape, dtype=dtypes[1]))
+
     def _chol_solve_case(rng, n):
         a = jnp.asarray(_spd(rng, 2, n))
         b = jnp.asarray(rng.standard_normal((2, n, 3))
@@ -251,7 +285,8 @@ def _register_all() -> None:
         run_pallas=lambda a, b: pp.cholesky_solve_pallas(a, b),
         run_oracle=lambda a, b: ref.cholesky_solve(a, b),
         make_case=_chol_solve_case, stream=tri_ri,
-        sizes=(8, 12, 16, 24, 32), kind="pipeline"))
+        sizes=(8, 12, 16, 24, 32), kind="pipeline",
+        filler=_identity_system_filler))
 
     def _qr_solve_case(rng, n):
         a = jnp.asarray(rng.standard_normal((2, n + 4, n))
@@ -266,7 +301,8 @@ def _register_all() -> None:
         run_pallas=lambda a, b: pp.qr_solve_pallas(a, b),
         run_oracle=lambda a, b: ref.qr_solve(a, b),
         make_case=_qr_solve_case, stream=tri_ri,
-        sizes=(8, 12, 16, 24, 32), kind="pipeline"))
+        sizes=(8, 12, 16, 24, 32), kind="pipeline",
+        filler=_identity_system_filler))
 
     def _mmse_case(rng, n):
         h = jnp.asarray(rng.standard_normal((2, n + 4, n))
@@ -282,7 +318,8 @@ def _register_all() -> None:
                                                         sigma2=0.1),
         run_oracle=lambda h, y: ref.mmse_equalize(h, y, sigma2=0.1),
         make_case=_mmse_case, stream=tri_ri,
-        sizes=(8, 12, 16, 24, 32), kind="pipeline"))
+        sizes=(8, 12, 16, 24, 32), kind="pipeline",
+        filler=_identity_system_filler))
 
 
 def get(name: str) -> KernelSpec:

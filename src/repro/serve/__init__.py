@@ -1,0 +1,43 @@
+"""Serving stack for the FGOP reproduction.
+
+Layout (one concern per module, all sharing the ``EngineCore`` queue +
+lane-pool accounting + batch lifecycle):
+
+  core     EngineCore (+ FifoEngineCore), ManualClock, registry-driven
+           pad_group
+  decode   DecodeEngine / Request       (LM continuous-batching-lite)
+  solver   PipelineEngine / SolveJob    (single solver pipeline)
+  mux      SolverMux                    (mixed pipelines, shape-bucketed
+                                         continuous batching, deadline-
+                                         aware flush)
+  metrics  SLO dataclasses: p50/p99 latency, throughput, lane
+           utilization, padded-lane waste
+  engine   back-compat shim re-exporting the original names
+
+The kernel registry (``repro.kernels``) is the routing table: any
+``kind="pipeline"`` spec is servable, and its declared ``filler``
+supplies benign padding lanes.
+"""
+from repro.serve.core import (EngineCore, FifoEngineCore,  # noqa: F401
+                              ManualClock, pad_group)
+from repro.serve.metrics import (LatencyStats, LaunchRecord,  # noqa: F401
+                                 MetricsSnapshot, PipelineStats, Recorder)
+from repro.serve.mux import SolverMux  # noqa: F401
+from repro.serve.solver import PipelineEngine, SolveJob  # noqa: F401
+
+
+def __getattr__(name):
+    # decode pulls in the whole repro.models transformer stack; load it
+    # lazily (PEP 562) so solver-only consumers don't pay for it
+    if name in ("DecodeEngine", "Request"):
+        from repro.serve import decode
+        return getattr(decode, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "EngineCore", "FifoEngineCore", "ManualClock", "pad_group",
+    "DecodeEngine", "Request",
+    "PipelineEngine", "SolveJob", "SolverMux",
+    "LatencyStats", "LaunchRecord", "MetricsSnapshot", "PipelineStats",
+    "Recorder",
+]

@@ -1,0 +1,165 @@
+"""Common engine core shared by decode and solver serving.
+
+Both engine families (LM decode and solver pipelines) are the same
+machine at this altitude: submitted work, a fixed pool of ``lanes`` the
+device executes in lockstep, and a batch lifecycle of *take → pad to
+the pool → dispatch → scatter results → record metrics*.
+:class:`EngineCore` owns the shared clock, lane-pool accounting (a
+:class:`repro.serve.metrics.Recorder`), and group-dispatch lifecycle;
+:class:`FifoEngineCore` adds the single-FIFO queue used by
+``DecodeEngine`` and ``PipelineEngine`` (``SolverMux`` keeps
+per-pipeline shape buckets instead), so each engine only implements
+what actually differs: how a batch is executed.
+
+Padding is registry-driven: a lane group short of the pool size is
+filled from the pipeline's declared ``KernelSpec.filler`` — a benign
+per-lane problem (identity system, zero right-hand side) whose result
+is discarded.  There is deliberately no shape-sniffing fallback here;
+a spec that wants to be served padded must declare its filler.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.metrics import MetricsSnapshot, Recorder
+
+
+class ManualClock:
+    """Deterministic clock for tests and trace replays: ``clock()``
+    returns the current virtual time; ``advance()`` moves it."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class EngineCore:
+    """Lane-pool accounting + batch lifecycle, engine-agnostic.
+
+    ``lanes`` is the lockstep pool width (decode: slot count; solvers:
+    grid lanes per launch).  ``clock`` is any zero-arg callable returning
+    seconds — ``time.monotonic`` by default, :class:`ManualClock` in
+    tests/replays.  Engines call :meth:`record_launch` /
+    :meth:`record_job` as batches complete and expose :meth:`metrics`.
+
+    Deliberately queue-free: single-FIFO engines (decode, one-pipeline
+    solver) add the queue via :class:`FifoEngineCore`; the mux keeps its
+    own per-pipeline shape buckets instead.
+    """
+
+    def __init__(self, lanes: int, clock=None):
+        if lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {lanes}")
+        self.lanes = int(lanes)
+        self.clock = clock if clock is not None else time.monotonic
+        self.recorder = Recorder()
+
+    # ---------------- accounting ----------------
+
+    def record_launch(self, pipeline: str, shape: tuple, real: int,
+                      padded: int) -> None:
+        self.recorder.record_launch(pipeline, shape, real, padded,
+                                    self.clock())
+
+    def record_job(self, pipeline: str, item) -> None:
+        """Stamp ``finished_at`` and log the job's latency sample."""
+        item.finished_at = self.clock()
+        self.recorder.record_job(pipeline, item.submitted_at,
+                                 item.finished_at)
+
+    def metrics(self) -> MetricsSnapshot:
+        return self.recorder.snapshot()
+
+    def reset_metrics(self) -> None:
+        self.recorder.reset()
+
+    # ---------------- batch lifecycle ----------------
+
+    def dispatch_group(self, spec, fn, key: tuple, jobs: list) -> list:
+        """The one lane-group batch lifecycle, shared by every solver
+        engine: stack per-arg, pad to the pool from the spec's filler,
+        launch ``fn`` once, scatter per-lane results back onto the jobs,
+        and account the launch + per-job latencies."""
+        stacked = [np.stack([np.asarray(j.args[i]) for j in jobs])
+                   for i in range(len(jobs[0].args))]
+        padded, pad = pad_group(spec, stacked, self.lanes)
+        res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
+        self.record_launch(spec.name, key, len(jobs), pad)
+        for i, job in enumerate(jobs):
+            job.out = res[i]
+            self.record_job(spec.name, job)
+        return jobs
+
+
+class FifoEngineCore(EngineCore):
+    """EngineCore plus the single-FIFO queue lifecycle: submitted items
+    are stamped with ``submitted_at`` and popped oldest-first a lane
+    pool at a time."""
+
+    def __init__(self, lanes: int, clock=None):
+        super().__init__(lanes, clock=clock)
+        self._queue: list = []
+
+    def submit(self, item):
+        if getattr(item, "submitted_at", None) is None:
+            item.submitted_at = self.clock()
+        self._queue.append(item)
+        return item
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def take(self, k: int | None = None) -> list:
+        """Pop the oldest ``k`` (default: one lane pool) queued items."""
+        k = self.lanes if k is None else k
+        taken, self._queue = self._queue[:k], self._queue[k:]
+        return taken
+
+    def drain(self) -> list:
+        return self.take(len(self._queue))
+
+
+def pad_group(spec, stacked: list[np.ndarray], lanes: int
+              ) -> tuple[list[np.ndarray], int]:
+    """Pad a stacked arg group's batch dim up to a multiple of ``lanes``
+    using the spec's declared benign filler.
+
+    ``stacked`` holds one batched array per kernel argument.  Returns the
+    padded arrays and the pad count.  Raises if padding is needed but the
+    spec declares no filler — padding semantics are the kernel's to
+    declare, not the engine's to guess (the old "square 3-D arg ⇒ add
+    identity" heuristic is exactly what this replaces).
+    """
+    b = stacked[0].shape[0]
+    pad = (-b) % lanes
+    if pad == 0:
+        return stacked, 0
+    if spec.filler is None:
+        raise ValueError(
+            f"pipeline {spec.name!r} declares no padding filler; cannot "
+            f"pad a {b}-job group to the {lanes}-lane pool")
+    lane = spec.filler(tuple(a.shape[1:] for a in stacked),
+                       tuple(a.dtype for a in stacked))
+    if len(lane) != len(stacked):
+        raise ValueError(
+            f"{spec.name!r} filler returned {len(lane)} arrays for "
+            f"{len(stacked)} kernel args")
+    out = []
+    for arr, fill in zip(stacked, lane):
+        fill = np.asarray(fill, dtype=arr.dtype)
+        if fill.shape != arr.shape[1:]:
+            raise ValueError(
+                f"{spec.name!r} filler shape {fill.shape} != per-lane "
+                f"shape {arr.shape[1:]}")
+        reps = np.broadcast_to(fill, (pad,) + fill.shape)
+        out.append(np.concatenate([arr, reps], axis=0))
+    return out, pad

@@ -1,0 +1,103 @@
+"""LM decode serving: :class:`Request` + :class:`DecodeEngine`.
+
+DecodeEngine is continuous-batching-lite on top of
+:class:`repro.serve.core.EngineCore`: a fixed pool of ``batch`` lanes
+(slots); queued requests are taken a pool at a time, prompts
+right-aligned into a shared position stream, and the decode step is one
+jit'd SPMD program over the whole pool (padded slots masked — implicit
+vector masking over the request dimension).  The shared core supplies
+the queue, the clock and the lane/latency accounting, so decode traffic
+reports the same SLO metrics surface as the solver engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as D
+from repro.models.config import ArchConfig
+from repro.serve.core import FifoEngineCore
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float | None = None
+    finished_at: float | None = None
+
+
+class DecodeEngine(FifoEngineCore):
+    def __init__(self, cfg: ArchConfig, params, batch: int = 8,
+                 max_len: int = 512, eos_id: int = 1, seed: int = 0,
+                 clock=None):
+        super().__init__(batch, clock=clock)
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.eos = eos_id
+        self.cache = D.init_cache(cfg, self.lanes, max_len)
+        self.key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(
+            lambda p, c, t, pos: D.decode_step(p, cfg, c, t, pos))
+
+    def run(self) -> list[Request]:
+        """Lockstep pool decode (uniform positions). Simplification: all
+        pool members share a position counter; real deployments use
+        per-slot positions + paged caches."""
+        done: list[Request] = []
+        while self.pending():
+            active = self.take(self.lanes)
+            n_real = len(active)
+            # pad the pool
+            while len(active) < self.lanes:
+                active.append(Request(prompt=[self.eos], max_new=0))
+            plen = max(len(r.prompt) for r in active)
+            # right-align prompts into the shared position stream
+            toks = np.full((self.lanes, plen), self.eos, np.int64)
+            for i, r in enumerate(active):
+                toks[i, plen - len(r.prompt):] = r.prompt
+            pos = 0
+            for j in range(plen - 1):
+                _, self.cache = self._step(
+                    self.params, self.cache, jnp.asarray(toks[:, j:j + 1]),
+                    jnp.full((self.lanes,), pos, jnp.int32))
+                pos += 1
+            cur = jnp.asarray(toks[:, -1:])
+            max_new = max(r.max_new for r in active)
+            for _ in range(max_new):
+                logits, self.cache = self._step(
+                    self.params, self.cache, cur,
+                    jnp.full((self.lanes,), pos, jnp.int32))
+                pos += 1
+                if any(r.temperature > 0 for r in active):
+                    self.key, sub = jax.random.split(self.key)
+                    nxt = jax.random.categorical(sub, logits)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1)
+                nxt_np = np.asarray(nxt)
+                for i, r in enumerate(active):
+                    if not r.done and len(r.out) < r.max_new:
+                        tok = int(nxt_np[i])
+                        r.out.append(tok)
+                        if tok == self.eos:
+                            r.done = True
+                cur = nxt[:, None]
+                if all(r.done or len(r.out) >= r.max_new for r in active):
+                    break
+            self.record_launch("decode", ("pool", self.lanes),
+                               n_real, self.lanes - n_real)
+            for r in active[:n_real]:
+                if r.max_new > 0:
+                    self.record_job("decode", r)
+                    done.append(r)
+            # fresh cache per pool generation (slot-level reuse is the
+            # paged-cache extension)
+            self.cache = D.init_cache(self.cfg, self.lanes, self.max_len)
+        return done

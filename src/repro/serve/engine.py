@@ -1,190 +1,18 @@
-"""Batched serving engines: LM decode (DecodeEngine) and solver pipelines
-(PipelineEngine).
+"""Back-compat shim: the serving stack now lives in the ``repro.serve``
+package (core / decode / solver / mux / metrics).  Import from
+``repro.serve`` directly in new code; this module keeps the original
+``repro.serve.engine`` import path working."""
+from repro.serve.core import EngineCore, ManualClock  # noqa: F401
+from repro.serve.mux import SolverMux  # noqa: F401
+from repro.serve.solver import PipelineEngine, SolveJob  # noqa: F401
 
-DecodeEngine is continuous-batching-lite: a fixed pool of B slots;
-finished sequences free their slot and the next queued request is
-prefilled into it.  The decode step is one jit'd SPMD program over the
-whole pool (padded slots masked — implicit vector masking over the
-request dimension).
-
-PipelineEngine serves the registry's fused solver pipelines (5G-style
-equalization traffic): jobs are grouped by problem shape, padded to the
-lane-pool size, and dispatched as ONE pallas grid per group — the same
-lane model the paper's REVEL uses for per-subcarrier matrices.
-"""
-from __future__ import annotations
-
-import collections
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models import decode as D
-from repro.models import transformer as T
-from repro.models.config import ArchConfig
+__all__ = ["EngineCore", "ManualClock", "DecodeEngine", "Request",
+           "SolverMux", "PipelineEngine", "SolveJob"]
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: list[int]
-    max_new: int = 32
-    temperature: float = 0.0
-    out: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class DecodeEngine:
-    def __init__(self, cfg: ArchConfig, params, batch: int = 8,
-                 max_len: int = 512, eos_id: int = 1, seed: int = 0):
-        self.cfg = cfg
-        self.params = params
-        self.batch = batch
-        self.max_len = max_len
-        self.eos = eos_id
-        self.cache = D.init_cache(cfg, batch, max_len)
-        self.key = jax.random.PRNGKey(seed)
-        self._step = jax.jit(
-            lambda p, c, t, pos: D.decode_step(p, cfg, c, t, pos))
-        self._queue: list[Request] = []
-        self._slots: list[Request | None] = [None] * batch
-
-    def submit(self, req: Request):
-        self._queue.append(req)
-
-    def _prefill_slot(self, slot: int, req: Request, tokens, pos):
-        """Feed the prompt token-by-token through decode_step (correct,
-        simple; a fused prefill kernel is the TPU fast path)."""
-        for t in req.prompt[:-1]:
-            tokens[slot] = t
-            logits, self.cache = self._step(
-                self.params, self.cache,
-                jnp.asarray(tokens)[:, None],
-                jnp.full((self.batch,), pos, jnp.int32))
-            pos += 1
-        tokens[slot] = req.prompt[-1]
-        return pos
-
-    def run(self) -> list[Request]:
-        """Lockstep pool decode (uniform positions). Simplification: all
-        pool members share a position counter; real deployments use
-        per-slot positions + paged caches."""
-        done: list[Request] = []
-        while self._queue:
-            active = self._queue[: self.batch]
-            self._queue = self._queue[self.batch:]
-            # pad the pool
-            while len(active) < self.batch:
-                active.append(Request(prompt=[self.eos], max_new=0))
-            tokens = np.zeros((self.batch,), np.int64)
-            plen = max(len(r.prompt) for r in active)
-            # right-align prompts into the shared position stream
-            toks = np.full((self.batch, plen), self.eos, np.int64)
-            for i, r in enumerate(active):
-                toks[i, plen - len(r.prompt):] = r.prompt
-            pos = 0
-            for j in range(plen - 1):
-                _, self.cache = self._step(
-                    self.params, self.cache, jnp.asarray(toks[:, j:j + 1]),
-                    jnp.full((self.batch,), pos, jnp.int32))
-                pos += 1
-            cur = jnp.asarray(toks[:, -1:])
-            max_new = max(r.max_new for r in active)
-            for _ in range(max_new):
-                logits, self.cache = self._step(
-                    self.params, self.cache, cur,
-                    jnp.full((self.batch,), pos, jnp.int32))
-                pos += 1
-                if any(r.temperature > 0 for r in active):
-                    self.key, sub = jax.random.split(self.key)
-                    nxt = jax.random.categorical(sub, logits)
-                else:
-                    nxt = jnp.argmax(logits, axis=-1)
-                nxt_np = np.asarray(nxt)
-                for i, r in enumerate(active):
-                    if not r.done and len(r.out) < r.max_new:
-                        tok = int(nxt_np[i])
-                        r.out.append(tok)
-                        if tok == self.eos:
-                            r.done = True
-                cur = nxt[:, None]
-                if all(r.done or len(r.out) >= r.max_new for r in active):
-                    break
-            done.extend(r for r in active if r.max_new > 0)
-            # fresh cache per pool generation (slot-level reuse is the
-            # paged-cache extension)
-            self.cache = D.init_cache(self.cfg, self.batch, self.max_len)
-        return done
-
-
-# ---------------- solver-pipeline serving ----------------
-
-@dataclasses.dataclass
-class SolveJob:
-    """One solver problem: ``args`` are the per-problem arrays WITHOUT the
-    batch dimension (e.g. cholesky_solve: (a (N,N), b (N,M)));
-    ``out`` is filled by PipelineEngine.run()."""
-    args: tuple
-    out: np.ndarray | None = None
-
-
-class PipelineEngine:
-    """Batched solver service over a registered pipeline.
-
-    Jobs are grouped by problem shape, stacked, padded to the ``lanes``
-    pool size with identity problems (masked lanes — their results are
-    discarded), and executed as one grid launch per group.  ``pipeline``
-    is any ``kind="pipeline"`` name in the kernel registry; extra
-    keyword ``options`` (e.g. ``sigma2`` for mmse_equalize) are bound
-    into the served kernel.
-    """
-
-    def __init__(self, pipeline: str = "cholesky_solve", lanes: int = 8,
-                 **options):
-        from repro import kernels as K
-        self.spec = K.get(pipeline)
-        if self.spec.kind != "pipeline":
-            raise ValueError(f"{pipeline!r} is a {self.spec.kind}, "
-                             "not a servable pipeline")
-        self.lanes = lanes
-        self._queue: list[SolveJob] = []
-        self._fn = jax.jit(functools.partial(self.spec.pallas, **options))
-
-    def submit(self, job: SolveJob) -> SolveJob:
-        self._queue.append(job)
-        return job
-
-    def _pad_group(self, stacked: list[np.ndarray]) -> list[np.ndarray]:
-        """Pad the batch dim to a multiple of the lane count with benign
-        problems (identity matrix / zero rhs) so padded lanes stay
-        finite and cannot contaminate real lanes."""
-        b = stacked[0].shape[0]
-        pad = (-b) % self.lanes
-        if pad == 0:
-            return stacked
-        out = []
-        for arr in stacked:
-            filler = np.zeros((pad,) + arr.shape[1:], arr.dtype)
-            if filler.ndim == 3 and filler.shape[1] == filler.shape[2]:
-                filler += np.eye(filler.shape[1], dtype=arr.dtype)
-            out.append(np.concatenate([arr, filler], axis=0))
-        return out
-
-    def run(self) -> list[SolveJob]:
-        done: list[SolveJob] = []
-        groups: dict[tuple, list[SolveJob]] = collections.defaultdict(list)
-        for job in self._queue:
-            key = tuple(a.shape for a in job.args)
-            groups[key].append(job)
-        self._queue = []
-        for jobs in groups.values():
-            stacked = [np.stack([np.asarray(j.args[i]) for j in jobs])
-                       for i in range(len(jobs[0].args))]
-            padded = self._pad_group(stacked)
-            res = np.asarray(self._fn(*[jnp.asarray(p) for p in padded]))
-            for i, job in enumerate(jobs):
-                job.out = res[i]
-            done.extend(jobs)
-        return done
+def __getattr__(name):
+    # lazy like repro.serve.__init__: decode drags in repro.models
+    if name in ("DecodeEngine", "Request"):
+        from repro.serve import decode
+        return getattr(decode, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,151 @@
+"""SLO metrics for the serving stack — plain dataclasses, no deps.
+
+Every engine built on :class:`repro.serve.core.EngineCore` owns a
+:class:`Recorder` that accumulates two event kinds:
+
+  * **launches** — one per dispatched grid (a ``pallas_call`` over a
+    lane group): pipeline name, shape key, how many lanes carried real
+    jobs vs. benign padding.
+  * **jobs** — one per completed job: submit and finish timestamps on
+    the engine's clock (injectable — tests and trace replays use
+    :class:`repro.serve.core.ManualClock`).
+
+``Recorder.snapshot()`` folds the events into a :class:`MetricsSnapshot`
+with per-pipeline p50/p99/mean/max latency, throughput over the active
+window, lane utilization (real lanes / dispatched lanes) and padded-lane
+waste (the complement) — the SLO surface the ROADMAP asks
+``benchmarks/bench_pipelines.py`` to report for mixed traffic.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Linear-interpolated percentile of an already-sorted list."""
+    if not sorted_vals:
+        return math.nan
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = (q / 100.0) * (len(sorted_vals) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Submit-to-finish latency distribution, in clock seconds."""
+
+    count: int
+    p50: float
+    p99: float
+    mean: float
+    max: float
+
+    @staticmethod
+    def of(samples: list[float]) -> "LatencyStats":
+        if not samples:
+            return LatencyStats(0, math.nan, math.nan, math.nan, math.nan)
+        s = sorted(samples)
+        return LatencyStats(
+            count=len(s),
+            p50=_percentile(s, 50.0),
+            p99=_percentile(s, 99.0),
+            mean=sum(s) / len(s),
+            max=s[-1])
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchRecord:
+    """One dispatched grid: ``real + padded`` lanes went to the device."""
+
+    pipeline: str
+    shape: tuple
+    real: int
+    padded: int
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineStats:
+    """Aggregate SLO view of one pipeline's traffic."""
+
+    pipeline: str
+    jobs: int
+    launches: int
+    lanes_dispatched: int
+    lanes_padded: int
+    lane_utilization: float      # real lanes / dispatched lanes
+    padded_lane_waste: float     # padded lanes / dispatched lanes
+    latency: LatencyStats
+    throughput: float            # jobs/s over [first submit, last finish]
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSnapshot:
+    """Point-in-time fold of everything a Recorder has seen."""
+
+    pipelines: dict[str, PipelineStats]
+    launches: tuple[LaunchRecord, ...]
+    total_jobs: int
+    total_launches: int
+
+    def __getitem__(self, pipeline: str) -> PipelineStats:
+        return self.pipelines[pipeline]
+
+
+class Recorder:
+    """Accumulates launch/job events; ``snapshot()`` builds the stats."""
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self._launches: list[LaunchRecord] = []
+        self._jobs: dict[str, list[tuple[float, float]]] = \
+            collections.defaultdict(list)
+
+    def record_launch(self, pipeline: str, shape: tuple, real: int,
+                      padded: int, t: float) -> None:
+        self._launches.append(
+            LaunchRecord(pipeline, shape, int(real), int(padded), t))
+
+    def record_job(self, pipeline: str, submitted_at: float,
+                   finished_at: float) -> None:
+        self._jobs[pipeline].append((submitted_at, finished_at))
+
+    def snapshot(self) -> MetricsSnapshot:
+        per: dict[str, PipelineStats] = {}
+        names = set(self._jobs) | {l.pipeline for l in self._launches}
+        for name in sorted(names):
+            jobs = self._jobs.get(name, [])
+            launches = [l for l in self._launches if l.pipeline == name]
+            real = sum(l.real for l in launches)
+            padded = sum(l.padded for l in launches)
+            dispatched = real + padded
+            lat = LatencyStats.of([f - s for s, f in jobs])
+            if jobs:
+                window = max(f for _, f in jobs) - min(s for s, _ in jobs)
+                thr = len(jobs) / window if window > 0 else 0.0
+            else:
+                thr = 0.0
+            per[name] = PipelineStats(
+                pipeline=name,
+                jobs=len(jobs),
+                launches=len(launches),
+                lanes_dispatched=dispatched,
+                lanes_padded=padded,
+                lane_utilization=(real / dispatched) if dispatched else 0.0,
+                padded_lane_waste=(padded / dispatched) if dispatched
+                else 0.0,
+                latency=lat,
+                throughput=thr)
+        return MetricsSnapshot(
+            pipelines=per,
+            launches=tuple(self._launches),
+            total_jobs=sum(len(v) for v in self._jobs.values()),
+            total_launches=len(self._launches))

@@ -1,0 +1,185 @@
+"""Registry-driven multi-pipeline serving front-end: :class:`SolverMux`.
+
+A real 5G PUSCH chain mixes Cholesky-, QR-, and MMSE-shaped traffic in
+one pipeline rather than one kernel at a time.  ``SolverMux`` accepts
+that interleaved stream and serves it with the paper's lane model:
+
+  * **routing** — each submitted job names its pipeline; the kernel
+    registry resolves it to a per-pipeline :class:`_LanePool` (created
+    lazily, one jit'd program per pipeline × shape bucket).
+  * **shape buckets** — within a pool, jobs are bucketed by their
+    per-arg (shape, dtype) key; only bucket-mates share a lane group.
+  * **continuous batching** — ``poll(now)`` dispatches full lane groups
+    immediately and flushes *partial* buckets only when a deadline has
+    expired, the bucket has waited ``max_wait``, or pool pressure
+    (queued jobs ≥ ``pressure``) demands draining; ``run()`` drains
+    everything.  Bucket flush order is deadline-aware: the bucket with
+    the oldest (earliest) deadline flushes first, ties broken by
+    submission order.
+  * **padding** — a short lane group is topped up from the pipeline's
+    ``KernelSpec.filler`` (a declared benign problem, e.g. identity
+    system / zero rhs) so padded lanes stay finite and are discarded.
+
+API sketch::
+
+    mux = SolverMux(lanes=8)
+    job = mux.submit("mmse_equalize", h, y, deadline=now + 2e-3)
+    mux.submit("cholesky_solve", a, b)
+    done = mux.run()            # every job.out filled
+    snap = mux.metrics()        # per-pipeline p50/p99, utilization, ...
+
+All timing runs on an injectable clock (``time.monotonic`` by default,
+:class:`repro.serve.core.ManualClock` for deterministic tests and trace
+replays).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import numpy as np
+
+from repro.serve.core import EngineCore
+from repro.serve.solver import SolveJob, resolve_pipeline_spec
+
+
+def _bucket_priority(jobs: list[SolveJob]) -> tuple:
+    """Oldest deadline first; FIFO (arrival seq) among deadline ties and
+    no-deadline buckets.  Derived from the queued jobs each time, so a
+    bucket whose oldest jobs were chunked away re-ranks correctly."""
+    deadline = min((j.deadline for j in jobs if j.deadline is not None),
+                   default=math.inf)
+    return (deadline, min(j.seq for j in jobs))
+
+
+class _LanePool:
+    """Per-pipeline lane pool: jit'd kernel + shape buckets (lists of
+    queued jobs keyed by per-arg shape/dtype)."""
+
+    def __init__(self, spec, options: dict):
+        self.spec = spec
+        self.fn = jax.jit(functools.partial(spec.pallas, **options))
+        self.buckets: dict[tuple, list[SolveJob]] = {}
+
+    def enqueue(self, job: SolveJob) -> None:
+        self.buckets.setdefault(job.shape_key(), []).append(job)
+
+    def queued(self) -> int:
+        return sum(len(jobs) for jobs in self.buckets.values())
+
+
+class SolverMux(EngineCore):
+    """Mixed-job-type solver serving with shape-bucketed continuous
+    batching and a deadline-aware flush policy.
+
+    Parameters:
+      lanes     lane-group width per grid launch (per-pipeline pools all
+                share it; a launch never carries more than ``lanes`` jobs)
+      max_wait  seconds a partial bucket may age before ``poll`` flushes
+                it anyway (``None``: only deadlines/pressure flush
+                partials)
+      pressure  queued-job count in a pool above which ``poll`` flushes
+                partial buckets (oldest deadline first) until relieved;
+                defaults to ``4 * lanes``
+      options   per-pipeline kwargs bound into the served kernel, e.g.
+                ``{"mmse_equalize": {"sigma2": 0.05}}``
+      clock     zero-arg time source (default ``time.monotonic``)
+    """
+
+    def __init__(self, lanes: int = 8, *, max_wait: float | None = None,
+                 pressure: int | None = None, clock=None,
+                 options: dict[str, dict] | None = None):
+        super().__init__(lanes, clock=clock)
+        self.max_wait = max_wait
+        self.pressure = 4 * lanes if pressure is None else pressure
+        self._options = dict(options or {})
+        self._pools: dict[str, _LanePool] = {}
+        self._seq = 0
+
+    # ---------------- submission / routing ----------------
+
+    def _pool(self, pipeline: str) -> _LanePool:
+        pool = self._pools.get(pipeline)
+        if pool is None:
+            spec = resolve_pipeline_spec(pipeline)
+            pool = _LanePool(spec, self._options.get(pipeline, {}))
+            self._pools[pipeline] = pool
+        return pool
+
+    def submit(self, pipeline: str, *args,
+               deadline: float | None = None) -> SolveJob:
+        """Route one job to its pipeline's lane pool and shape bucket.
+
+        ``args`` are per-problem arrays WITHOUT the batch dimension;
+        ``deadline`` is an absolute clock time (None = best effort).
+        Returns the queued :class:`SolveJob` (``out`` filled once a
+        dispatch containing it runs).
+        """
+        pool = self._pool(pipeline)
+        self._seq += 1
+        job = SolveJob(args=tuple(np.asarray(a) for a in args),
+                       pipeline=pipeline, deadline=deadline,
+                       submitted_at=self.clock(), seq=self._seq)
+        pool.enqueue(job)
+        return job
+
+    def pending(self) -> int:
+        return sum(p.queued() for p in self._pools.values())
+
+    # ---------------- dispatch ----------------
+
+    def _sorted_buckets(self) -> list[tuple[_LanePool, tuple]]:
+        """All non-empty buckets across pools, deadline-priority order."""
+        items = [(pool, key) for pool in self._pools.values()
+                 for key, jobs in pool.buckets.items() if jobs]
+        items.sort(key=lambda pk: _bucket_priority(pk[0].buckets[pk[1]]))
+        return items
+
+    def _flush_bucket(self, pool: _LanePool, key: tuple, *,
+                      full_only: bool) -> list[SolveJob]:
+        """Dispatch a bucket in lane-group chunks.  ``full_only`` leaves
+        the trailing partial chunk queued (continuous-batching path)."""
+        jobs = pool.buckets[key]
+        done: list[SolveJob] = []
+        while len(jobs) >= self.lanes:
+            chunk, jobs = jobs[:self.lanes], jobs[self.lanes:]
+            done.extend(self.dispatch_group(pool.spec, pool.fn, key, chunk))
+        if jobs and not full_only:
+            chunk, jobs = jobs, []
+            done.extend(self.dispatch_group(pool.spec, pool.fn, key, chunk))
+        if jobs:
+            pool.buckets[key] = jobs
+        else:
+            del pool.buckets[key]
+        return done
+
+    def _expired(self, jobs: list[SolveJob], now: float) -> bool:
+        deadline, _ = _bucket_priority(jobs)
+        if deadline <= now:
+            return True
+        age = now - min(j.submitted_at for j in jobs)
+        return self.max_wait is not None and age >= self.max_wait
+
+    def poll(self, now: float | None = None) -> list[SolveJob]:
+        """One continuous-batching round: full lane groups always
+        dispatch; partial buckets dispatch only on expired deadline,
+        ``max_wait`` age, or pool pressure.  Oldest deadline flushes
+        first throughout."""
+        now = self.clock() if now is None else now
+        done: list[SolveJob] = []
+        for pool, key in self._sorted_buckets():
+            done.extend(self._flush_bucket(pool, key, full_only=True))
+        for pool, key in self._sorted_buckets():
+            jobs = pool.buckets[key]
+            if self._expired(jobs, now) or pool.queued() >= self.pressure:
+                done.extend(self._flush_bucket(pool, key, full_only=False))
+        return done
+
+    def run(self) -> list[SolveJob]:
+        """Drain everything queued (deadline-priority bucket order) and
+        return the completed jobs."""
+        done: list[SolveJob] = []
+        for pool, key in self._sorted_buckets():
+            done.extend(self._flush_bucket(pool, key, full_only=False))
+        return done

@@ -1,0 +1,87 @@
+"""Single-pipeline solver serving: :class:`SolveJob` + :class:`PipelineEngine`.
+
+``PipelineEngine`` is the one-pipeline-per-instance engine from the
+original serving stack, rebased on :class:`repro.serve.core.EngineCore`:
+the queue, lane accounting and registry-driven padding are shared with
+the decode engine and the multi-pipeline :class:`repro.serve.mux.SolverMux`
+(which is what you want for mixed traffic).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+
+from repro.serve.core import FifoEngineCore
+
+
+@dataclasses.dataclass
+class SolveJob:
+    """One solver problem.
+
+    ``args`` are the per-problem arrays WITHOUT the batch dimension
+    (e.g. cholesky_solve: ``(a (N,N), b (N,M))``); ``out`` is filled by
+    the serving engine.  ``pipeline`` and ``deadline`` (absolute clock
+    seconds; ``None`` = best-effort) are used by :class:`SolverMux`;
+    ``submitted_at``/``finished_at`` are stamped by the engine clock and
+    feed the SLO metrics; ``seq`` is the mux's global arrival order (the
+    FIFO tiebreak among equal-deadline buckets).
+    """
+
+    args: tuple
+    out: np.ndarray | None = None
+    pipeline: str | None = None
+    deadline: float | None = None
+    submitted_at: float | None = None
+    finished_at: float | None = None
+    seq: int = 0
+
+    def shape_key(self) -> tuple:
+        """Shape bucket: per-arg (shape, dtype) — jobs sharing it can be
+        stacked into one lane group / one compiled program."""
+        return tuple((np.shape(a), str(np.asarray(a).dtype))
+                     for a in self.args)
+
+
+def resolve_pipeline_spec(pipeline: str):
+    """Registry lookup + kind check shared by the solver engines."""
+    from repro import kernels as K
+    spec = K.get(pipeline)
+    if spec.kind != "pipeline":
+        raise ValueError(f"{pipeline!r} is a {spec.kind}, "
+                         "not a servable pipeline")
+    return spec
+
+
+class PipelineEngine(FifoEngineCore):
+    """Batched solver service over a single registered pipeline.
+
+    Jobs are grouped by problem shape, stacked, padded to a multiple of
+    the ``lanes`` pool size with the spec's declared benign filler
+    (padded lanes' results are discarded), and executed as one grid
+    launch per group.  ``pipeline`` is any ``kind="pipeline"`` name in
+    the kernel registry; extra keyword ``options`` (e.g. ``sigma2`` for
+    mmse_equalize) are bound into the served kernel.
+    """
+
+    def __init__(self, pipeline: str = "cholesky_solve", lanes: int = 8,
+                 clock=None, **options):
+        super().__init__(lanes, clock=clock)
+        self.spec = resolve_pipeline_spec(pipeline)
+        self._fn = jax.jit(functools.partial(self.spec.pallas, **options))
+
+    def submit(self, job: SolveJob) -> SolveJob:
+        job.pipeline = self.spec.name
+        return super().submit(job)
+
+    def run(self) -> list[SolveJob]:
+        done: list[SolveJob] = []
+        groups: dict[tuple, list[SolveJob]] = collections.defaultdict(list)
+        for job in self.drain():
+            groups[job.shape_key()].append(job)
+        for key, jobs in groups.items():
+            done.extend(self.dispatch_group(self.spec, self._fn, key, jobs))
+        return done

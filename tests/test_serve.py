@@ -55,3 +55,18 @@ def test_engine_sampled_mode(engine):
     engine.submit(Request(prompt=[3, 4, 5], max_new=4, temperature=1.0))
     done = engine.run()
     assert len(done[0].out) >= 1
+
+
+def test_engine_shares_core_metrics(engine):
+    """DecodeEngine rides the same EngineCore accounting as the solver
+    engines: pool launches and request latencies land in the snapshot."""
+    engine.reset_metrics()
+    for i in range(6):                 # 6 requests, 4-slot pool
+        engine.submit(Request(prompt=[2 + i, 3], max_new=2))
+    engine.run()
+    st = engine.metrics()["decode"]
+    assert st.jobs == 6
+    assert st.launches == 2            # two pool generations
+    assert st.lanes_dispatched == 8 and st.lanes_padded == 2
+    assert st.lane_utilization == pytest.approx(6 / 8)
+    assert st.latency.count == 6 and st.latency.p50 >= 0.0

@@ -16,10 +16,17 @@ uniform ``run_pallas`` adapter at its smallest size, with the stream
 capability (paper F2-F4 classification) emitted in the derived column —
 the registry, not a hand-maintained import list, enumerates the kernels.
 
+``run_variants()`` (entry ``variants`` in benchmarks.run) is the
+dispatch-driven sweep: every registered pipeline variant (base, blocked,
+split_complex) is exercised THROUGH ``KernelSpec.dispatch`` at its
+declared sizes, recording wall-clock, model FLOPs, and dispatch counts —
+the data persisted to ``BENCH_pipelines.json`` via ``run.py --json-out``.
+
 ``run_slo()`` (wired separately in benchmarks.run) measures the serving
-layer: a mixed cholesky/qr/mmse trace through the SolverMux, emitting
-per-pipeline p50/p99 latency, throughput, lane utilization, and
-padded-lane waste — the SLO surface of the multiplexed lane pools.
+layer: a mixed cholesky/qr/mmse trace (including split-complex MMSE
+jobs) through the SolverMux, emitting per-pipeline p50/p99 latency,
+throughput, lane utilization, padded-lane waste, and per-variant
+dispatch counts — the SLO surface of the multiplexed lane pools.
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, header, timeit
+from benchmarks.common import emit, emit_variant, header, timeit
 from repro import kernels as K
 from repro import pipelines as pp
 from repro.kernels import ref
@@ -128,6 +135,51 @@ def run() -> None:
              f"{spec.kind},{spec.stream(n).capability}")
 
 
+# ---- variant-dispatched sweep (feeds BENCH_pipelines.json) ----
+
+VARIANT_REPS = 3
+VARIANT_WARMUP = 1
+
+
+def run_variants() -> None:
+    """Every registered pipeline variant, each at its declared sizes
+    (base: the spec's paper sizes; blocked: 128/256; split: the
+    split-plane arity), invoked THROUGH ``KernelSpec.dispatch`` — the
+    benchmark never names an entry point, it builds a case and lets the
+    registry route it, asserting the expected variant won.  Per case it
+    records wall-clock of the jit'd dispatched entry point (one compile
+    per variant x size, like the serving engines; warmup absorbs the
+    compile so ``wall_us`` is steady-state kernel time with the
+    dispatch decision hoisted out of the timed region), the closed-form
+    model FLOPs, and how many calls ran via the dispatched variant
+    (``dispatches`` = warmup + timed reps) for the persisted
+    ``BENCH_pipelines.json`` baseline."""
+    rng = np.random.default_rng(3)
+    header("variant dispatch sweep (per-variant wall-clock + model flops)")
+    for spec in K.specs(kind="pipeline"):
+        for variant in (spec.base,) + tuple(spec.variants):
+            sizes = variant.sizes or (spec.sizes[0],)
+            for n in sizes:
+                make = variant.make_case or spec.make_case
+                args = make(rng, n)
+                picked = spec.dispatch(*args)
+                assert picked.name == variant.name, (
+                    f"{spec.name}@{n}: dispatch chose {picked.name!r}, "
+                    f"expected {variant.name!r}")
+                jfn = jax.jit(picked.fn)
+                t = timeit(jfn, *args, reps=VARIANT_REPS,
+                           warmup=VARIANT_WARMUP)
+                dispatches = VARIANT_WARMUP + VARIANT_REPS
+                shapes = tuple(np.shape(a)[1:] for a in args)
+                flops = (float(variant.flops(shapes))
+                         if variant.flops is not None else 0.0)
+                emit(f"variants/{spec.name}/{variant.name}{n}/pallas", t,
+                     f"model_flops={flops:.0f}")
+                emit_variant(pipeline=spec.name, variant=variant.name,
+                             n=n, wall_us=t, model_flops=flops,
+                             dispatches=dispatches)
+
+
 # ---- SLO / mixed-traffic serving (SolverMux) ----
 
 SLO_LANES = 8
@@ -137,16 +189,25 @@ SLO_ROUNDS = 6
 
 def _slo_trace(rng):
     """Interleaved PUSCH-style mix: per round, MMSE bulk at every size
-    plus control-path Cholesky and QR jobs — three job types, >= 2
-    shapes each, arriving interleaved (never pre-grouped)."""
+    (half arriving as SPLIT re/im planes — the mux must route their
+    4-arg buckets to the split_complex variant), plus control-path
+    Cholesky and QR jobs — three job types, >= 2 shapes each, arriving
+    interleaved (never pre-grouped)."""
     trace = []
-    for _ in range(SLO_ROUNDS):
+    for rnd in range(SLO_ROUNDS):
         for n in SLO_SIZES:
             m = n + 4
-            for _ in range(3):
-                trace.append(("mmse_equalize", (
-                    rng.standard_normal((m, n)).astype(np.float32),
-                    rng.standard_normal((m, 2)).astype(np.float32))))
+            for i in range(3):
+                if (rnd + i) % 2:
+                    trace.append(("mmse_equalize", (
+                        rng.standard_normal((m, n)).astype(np.float32),
+                        rng.standard_normal((m, n)).astype(np.float32),
+                        rng.standard_normal((m, 2)).astype(np.float32),
+                        rng.standard_normal((m, 2)).astype(np.float32))))
+                else:
+                    trace.append(("mmse_equalize", (
+                        rng.standard_normal((m, n)).astype(np.float32),
+                        rng.standard_normal((m, 2)).astype(np.float32))))
             trace.append(("cholesky_solve", (
                 _spd(rng, 1, n)[0],
                 rng.standard_normal((n, 2)).astype(np.float32))))
@@ -183,6 +244,9 @@ def run_slo() -> None:
 
     snap = mux.metrics()
     for name, st in sorted(snap.pipelines.items()):
+        counts = ";".join(f"{v}:{c}" for v, c in
+                          sorted(st.dispatch_counts.items()))
+        emit(f"serve_slo/{name}/dispatch", float(st.launches), counts)
         emit(f"serve_slo/{name}/latency_p50", st.latency.p50 * 1e6,
              f"p99={st.latency.p99 * 1e6:.0f}us,n={st.jobs}")
         emit(f"serve_slo/{name}/latency_p99", st.latency.p99 * 1e6,

@@ -1,0 +1,48 @@
+"""Schema/coverage gate for ``BENCH_pipelines.json`` (CI bench-smoke).
+
+Asserts the JSON written by ``benchmarks.run --json-out`` parses and
+that EVERY variant registered on every pipeline spec (including each
+spec's ``base``) was actually exercised — a variant silently dropping
+out of the dispatch sweep (predicate typo, bench regression, registry
+rename) fails CI here instead of rotting unmeasured.
+
+  PYTHONPATH=src python -m benchmarks.check_bench_json BENCH_pipelines.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro import kernels as K
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload.get("schema") == 1, f"unknown schema: {payload.get('schema')}"
+    assert payload["rows"], "no benchmark rows recorded"
+
+    exercised = {(rec["pipeline"], rec["variant"])
+                 for rec in payload["variants"]
+                 if rec.get("dispatches", 0) > 0}
+    expected = {(spec.name, v.name)
+                for spec in K.specs(kind="pipeline")
+                for v in (spec.base,) + tuple(spec.variants)}
+    missing = expected - exercised
+    assert not missing, (
+        f"registered variants not exercised by the benchmark: "
+        f"{sorted(missing)} (exercised: {sorted(exercised)})")
+
+    counts = payload["dispatch_counts"]
+    for pipeline, variant in expected:
+        assert counts.get(pipeline, {}).get(variant, 0) > 0, (
+            f"dispatch_counts missing {pipeline}/{variant}")
+    for rec in payload["variants"]:
+        assert rec["model_flops"] > 0, f"zero model flops: {rec}"
+        assert rec["wall_us"] > 0, f"zero wall-clock: {rec}"
+    print(f"{path}: ok — {len(payload['rows'])} rows, "
+          f"{len(expected)} pipeline variants all exercised")
+
+
+if __name__ == "__main__":
+    check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_pipelines.json")

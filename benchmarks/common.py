@@ -1,5 +1,6 @@
-"""Shared benchmark plumbing: wall-clock timing of jitted callables and the
-``name,us_per_call,derived`` CSV contract used by benchmarks.run."""
+"""Shared benchmark plumbing: wall-clock timing of jitted callables, the
+``name,us_per_call,derived`` CSV contract used by benchmarks.run, and the
+variant-dispatch record feeding ``BENCH_pipelines.json``."""
 from __future__ import annotations
 
 import time
@@ -7,6 +8,7 @@ import time
 import jax
 
 ROWS: list[tuple[str, float, str]] = []
+VARIANTS: list[dict] = []
 
 
 def timeit(fn, *args, reps: int = 20, warmup: int = 3) -> float:
@@ -31,3 +33,10 @@ def emit(name: str, us: float, derived: str = "") -> None:
 
 def header(title: str) -> None:
     print(f"# --- {title} ---", flush=True)
+
+
+def emit_variant(**fields) -> None:
+    """Record one variant-dispatch bench case (pipeline, variant, n,
+    dispatches, model_flops, wall-clock) for the ``--json-out``
+    baseline."""
+    VARIANTS.append(fields)

@@ -7,23 +7,32 @@
   fig17        throughput-optimized         bench_throughput
   roofline     3-term table from dry-run    bench_roofline
   serving      mixed-traffic SLO (mux)      bench_pipelines.run_slo
+  variants     variant-dispatch sweep       bench_pipelines.run_variants
 
-Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters."""
+Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters.
+``--json-out FILE`` additionally persists the run as JSON — rows plus
+the per-kernel/per-variant dispatch counts, model FLOPs and wall-clock
+from the ``variants`` entry — the ``BENCH_pipelines.json`` perf baseline
+committed at the repo root and checked by CI's bench-smoke step
+(see benchmarks.check_bench_json)."""
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from benchmarks import (bench_control_overhead, bench_latency,
                         bench_masking_util, bench_mechanisms,
-                        bench_pipelines, bench_roofline, bench_throughput)
+                        bench_pipelines, bench_roofline, bench_throughput,
+                        common)
 
 ENTRIES = [
     ("control_overhead", bench_control_overhead.run),
     ("masking_util", bench_masking_util.run),
     ("mechanisms", bench_mechanisms.run),
     ("pipelines", bench_pipelines.run),
+    ("variants", bench_pipelines.run_variants),
     ("serve_slo", bench_pipelines.run_slo),
     ("latency", bench_latency.run),
     ("throughput", bench_throughput.run),
@@ -31,17 +40,45 @@ ENTRIES = [
 ]
 
 
+def json_payload(ran: list[str]) -> dict:
+    """Fold the collected rows + variant records into the persisted
+    baseline structure (schema 1)."""
+    counts: dict[str, dict[str, int]] = {}
+    for rec in common.VARIANTS:
+        per = counts.setdefault(rec["pipeline"], {})
+        per[rec["variant"]] = per.get(rec["variant"], 0) \
+            + int(rec["dispatches"])
+    return {
+        "schema": 1,
+        "entries": ran,
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in common.ROWS],
+        "variants": common.VARIANTS,
+        "dispatch_counts": counts,
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default=None, metavar="FILE",
+                    help="write rows + variant dispatch/flops records "
+                         "as JSON (the BENCH_pipelines.json baseline)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     t0 = time.time()
+    ran = []
     for name, fn in ENTRIES:
         if args.only and args.only not in name:
             continue
         fn()
+        ran.append(name)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(json_payload(ran), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json_out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

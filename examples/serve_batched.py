@@ -10,7 +10,7 @@ import jax
 
 from repro.configs import get_smoke
 from repro.models import transformer as T
-from repro.serve.engine import DecodeEngine, Request
+from repro.serve import DecodeEngine, Request
 
 
 def main():

@@ -1,12 +1,23 @@
 """Batched radix-2 FFT (paper's FFT workload; RR streams per Table 5).
 
-Iterative Cooley-Tukey, fully VMEM-resident.  All per-stage gather
-indices and twiddles are host-precomputed *stream tables* (the REVEL
-analog: the control core issues one stream command per stage; the pattern
-state machines do the rest).  Complex values travel as separate re/im
-planes (TPU has no native complex).  The stage loop is an ordered
-dependence chain — stage s+1 consumes everything stage s produced — so it
-stays inside one kernel rather than round-tripping HBM per stage.
+Iterative Cooley-Tukey, fully VMEM-resident.  The bit-reversal
+permutation and the twiddle factors are host-precomputed *stream tables*
+(the REVEL analog: the control core issues one stream command per stage;
+the pattern state machines do the rest).  Complex values travel as
+separate re/im planes (TPU has no native complex).  The stage loop is an
+ordered dependence chain — stage s+1 consumes everything stage s
+produced — so it stays inside one kernel rather than round-tripping HBM
+per stage.
+
+Twiddle storage is CHUNKED: stage ``s`` only has ``2**s`` distinct
+twiddles (w_span^off for off < span/2), so the table packs stage ``s``
+at offset ``2**s - 1`` for a total of ``n - 1`` complex entries.  The
+old layout materialized all ``stages * n/2`` repeated entries plus two
+equally-sized butterfly index tables — at the paper's 1024-point size
+that is ~11x the VMEM footprint, which is what capped the registered
+sizes at 128.  Butterfly partners and per-stage twiddle offsets are now
+recomputed in-kernel from an iota with shift/mask arithmetic (a pattern
+state machine, not a stored stream).
 """
 from __future__ import annotations
 
@@ -22,44 +33,46 @@ from repro.kernels.common import interpret_default
 
 
 def fft_tables(n: int):
-    """Host-side stream tables: bit-reversal perm, per-stage butterfly
-    gather indices (i, j) and twiddles (re, im)."""
+    """Host-side stream tables: bit-reversal permutation and the CHUNKED
+    twiddle table (re, im) — stage ``s`` occupies slots
+    ``[2**s - 1, 2**(s+1) - 1)``, ``n - 1`` entries total."""
     stages = int(np.log2(n))
     assert 2 ** stages == n, "n must be a power of two"
     rev = np.zeros(n, np.int32)
     bits = stages
     for i in range(n):
         rev[i] = int(format(i, f"0{bits}b")[::-1], 2) if bits else 0
-    i_idx = np.zeros((stages, n // 2), np.int32)
-    j_idx = np.zeros((stages, n // 2), np.int32)
-    w_re = np.zeros((stages, n // 2), np.float32)
-    w_im = np.zeros((stages, n // 2), np.float32)
+    w_re = np.zeros(max(n - 1, 1), np.float32)
+    w_im = np.zeros(max(n - 1, 1), np.float32)
     for s in range(stages):
         half = 1 << s
         span = half << 1
-        for b in range(n // 2):
-            blk, off = divmod(b, half)
-            i = blk * span + off
-            i_idx[s, b] = i
-            j_idx[s, b] = i + half
+        base = half - 1                  # sum_{t<s} 2**t
+        for off in range(half):
             ang = -2.0 * np.pi * off / span
-            w_re[s, b] = np.cos(ang)
-            w_im[s, b] = np.sin(ang)
-    return rev, i_idx, j_idx, w_re, w_im
+            w_re[base + off] = np.cos(ang)
+            w_im[base + off] = np.sin(ang)
+    return rev, w_re, w_im
 
 
-def _fft_kernel(xr_ref, xi_ref, rev_ref, ii_ref, jj_ref, wr_ref, wi_ref,
-                or_ref, oi_ref, *, n: int, stages: int):
+def _fft_kernel(xr_ref, xi_ref, rev_ref, wr_ref, wi_ref, or_ref, oi_ref,
+                *, n: int, stages: int):
     rev = rev_ref[...]
     xr = jnp.take(xr_ref[0], rev)
     xi = jnp.take(xi_ref[0], rev)
+    b_idx = jax.lax.broadcasted_iota(jnp.int32, (n // 2,), 0)
 
     def stage(s, x):
         xr, xi = x
-        ii = ii_ref[s]
-        jj = jj_ref[s]
-        wr = wr_ref[s]
-        wi = wi_ref[s]
+        half = jnp.left_shift(1, s)
+        off = jnp.bitwise_and(b_idx, half - 1)
+        # butterfly partners: i = (b >> s) << (s+1) | off, j = i + half
+        ii = jnp.left_shift(jnp.right_shift(b_idx, s), s + 1) + off
+        jj = ii + half
+        # chunked twiddle gather: stage s lives at offset 2**s - 1
+        widx = (half - 1) + off
+        wr = jnp.take(wr_ref[...], widx)
+        wi = jnp.take(wi_ref[...], widx)
         ur, ui = jnp.take(xr, ii), jnp.take(xi, ii)
         vr, vi = jnp.take(xr, jj), jnp.take(xi, jj)
         # twiddle multiply (critical vector region)
@@ -76,25 +89,25 @@ def _fft_kernel(xr_ref, xi_ref, rev_ref, ii_ref, jj_ref, wr_ref, wi_ref,
 
 def fft_pallas(x_re: jax.Array, x_im: jax.Array, *,
                interpret: bool | None = None):
-    """(B, N) re/im -> (re, im) of the DFT."""
+    """(B, N) re/im -> (re, im) of the DFT.  VMEM per lane is O(N)
+    (signal + bit-reversal + chunked twiddles), so the paper's
+    1024-point size stays resident."""
     b, n = x_re.shape
     stages = int(np.log2(n))
-    rev, ii, jj, wr, wi = fft_tables(n)
+    rev, wr, wi = fft_tables(n)
     if interpret is None:
         interpret = interpret_default()
     row = lambda i: (i, 0)          # noqa: E731
-    tab = lambda i: (0, 0)          # noqa: E731
+    tab = lambda i: (0,)            # noqa: E731
     return pl.pallas_call(
         functools.partial(_fft_kernel, n=n, stages=stages),
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, n), row, memory_space=pltpu.VMEM),
             pl.BlockSpec((1, n), row, memory_space=pltpu.VMEM),
-            pl.BlockSpec((n,), lambda i: (0,), memory_space=pltpu.VMEM),
-            pl.BlockSpec((stages, n // 2), tab, memory_space=pltpu.VMEM),
-            pl.BlockSpec((stages, n // 2), tab, memory_space=pltpu.VMEM),
-            pl.BlockSpec((stages, n // 2), tab, memory_space=pltpu.VMEM),
-            pl.BlockSpec((stages, n // 2), tab, memory_space=pltpu.VMEM),
+            pl.BlockSpec((n,), tab, memory_space=pltpu.VMEM),
+            pl.BlockSpec((max(n - 1, 1),), tab, memory_space=pltpu.VMEM),
+            pl.BlockSpec((max(n - 1, 1),), tab, memory_space=pltpu.VMEM),
         ],
         out_specs=[
             pl.BlockSpec((1, n), row, memory_space=pltpu.VMEM),
@@ -105,5 +118,4 @@ def fft_pallas(x_re: jax.Array, x_im: jax.Array, *,
             jax.ShapeDtypeStruct((b, n), x_im.dtype),
         ],
         interpret=interpret,
-    )(x_re, x_im, jnp.asarray(rev), jnp.asarray(ii), jnp.asarray(jj),
-      jnp.asarray(wr), jnp.asarray(wi))
+    )(x_re, x_im, jnp.asarray(rev), jnp.asarray(wr), jnp.asarray(wi))

@@ -88,6 +88,27 @@ def mmse_equalize(h: jax.Array, y: jax.Array, *,
     return jnp.linalg.solve(g, rhs)
 
 
+def mmse_equalize_split(hr: jax.Array, hi: jax.Array, yr: jax.Array,
+                        yi: jax.Array, *, sigma2: float = 0.1) -> jax.Array:
+    """Complex-valued LMMSE oracle for the split re/im kernel.
+
+    hr/hi: (B,M,N) channel planes, yr/yi: (B,M,K) observation planes.
+    Solves x = (H^H H + s I)^{-1} H^H y in complex64 and returns the
+    REAL-STACKED result (B, 2N, K) = [Re x; Im x] — the layout the real
+    expansion produces, so split- and expansion-path answers to the same
+    complex problem compare element-for-element.
+    """
+    h = hr.astype(jnp.complex64) + 1j * hi.astype(jnp.complex64)
+    y = yr.astype(jnp.complex64) + 1j * yi.astype(jnp.complex64)
+    n = h.shape[-1]
+    g = jnp.einsum("bmi,bmj->bij", jnp.conj(h), h) \
+        + sigma2 * jnp.eye(n, dtype=h.dtype)
+    rhs = jnp.einsum("bmn,bmk->bnk", jnp.conj(h), y)
+    x = jnp.linalg.solve(g, rhs)
+    return jnp.concatenate([jnp.real(x), jnp.imag(x)],
+                           axis=-2).astype(hr.dtype)
+
+
 # ---------------- dense / DSP ----------------
 
 def gemm(x: jax.Array, y: jax.Array) -> jax.Array:

@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
-from repro.serve.engine import DecodeEngine, Request
+from repro.serve import DecodeEngine, Request
 
 
 def main(argv=None):

@@ -30,15 +30,24 @@ SLOT_MS = 0.5          # 5G numerology-1 TTI
 
 
 def build_slot_jobs(rng, slot: int, sizes: list[int]):
-    """One TTI's job mix: (pipeline, args) tuples."""
+    """One TTI's job mix: (pipeline, args) tuples.  Alternate MMSE jobs
+    arrive as SPLIT re/im planes (the form a real front end produces) —
+    the mux routes their 4-arg buckets to the split_complex variant."""
     jobs = []
     for n in sizes:
         m = n + 4
         # MMSE bulk: a few subcarrier groups per size per slot
-        for _ in range(2 + slot % 2):
-            h = rng.standard_normal((m, n)).astype(np.float32)
-            y = rng.standard_normal((m, 2)).astype(np.float32)
-            jobs.append(("mmse_equalize", (h, y)))
+        for i in range(2 + slot % 2):
+            if i % 2:
+                jobs.append(("mmse_equalize", (
+                    rng.standard_normal((m, n)).astype(np.float32),
+                    rng.standard_normal((m, n)).astype(np.float32),
+                    rng.standard_normal((m, 2)).astype(np.float32),
+                    rng.standard_normal((m, 2)).astype(np.float32))))
+            else:
+                h = rng.standard_normal((m, n)).astype(np.float32)
+                y = rng.standard_normal((m, 2)).astype(np.float32)
+                jobs.append(("mmse_equalize", (h, y)))
         # control path: whitening solve + channel refit, not every slot
         if slot % 2 == 0:
             a = sample_spd(rng, 1, n)[0]
@@ -100,14 +109,17 @@ def main(argv=None):
           f"-> {snap.total_jobs} jobs in {snap.total_launches} grid "
           f"launches ({wall:.2f}s wall, oracle check ok)")
     hdr = (f"{'pipeline':<16} {'jobs':>5} {'launch':>6} {'util':>6} "
-           f"{'waste':>6} {'p50_ms':>8} {'p99_ms':>8} {'jobs/s':>10}")
+           f"{'waste':>6} {'p50_ms':>8} {'p99_ms':>8} {'jobs/s':>10} "
+           f"dispatch")
     print(hdr)
     print("-" * len(hdr))
     for name, st in sorted(snap.pipelines.items()):
+        counts = ",".join(f"{v}:{c}" for v, c in
+                          sorted(st.dispatch_counts.items()))
         print(f"{name:<16} {st.jobs:>5} {st.launches:>6} "
               f"{st.lane_utilization:>6.2f} {st.padded_lane_waste:>6.2f} "
               f"{st.latency.p50 * 1e3:>8.3f} {st.latency.p99 * 1e3:>8.3f} "
-              f"{st.throughput:>10.1f}")
+              f"{st.throughput:>10.1f} {counts}")
     missed = sum(1 for j in done
                  if j.deadline is not None and j.finished_at > j.deadline)
     print(f"deadline misses (virtual clock): {missed}/{len(done)}")

@@ -28,19 +28,31 @@ fusion win in benchmarks/bench_pipelines.py, and a jit'd dispatching
 wrapper.  All are registered in the kernel registry
 (``repro.kernels.get/names/specs``) next to the primitive kernels, so
 tests, benchmarks, and the serve engine enumerate them uniformly.
+
+Each pipeline additionally registers performance *variants* the registry
+dispatcher (``KernelSpec.dispatch``) selects by shape/arity: blocked
+(``pl.BlockSpec``-tiled right-looking) ``cholesky_solve_blocked`` /
+``qr_solve_blocked`` for n >= 128, and the split re/im
+``mmse_equalize_split`` fast path for jobs arriving as 4 complex planes.
 """
 from repro.pipelines.cholesky_solve import (cholesky_solve,  # noqa: F401
+                                            cholesky_solve_blocked,
                                             cholesky_solve_pallas,
                                             cholesky_solve_unfused)
 from repro.pipelines.mmse import (expand_complex_channel,  # noqa: F401
                                   mmse_equalize, mmse_equalize_composed,
-                                  mmse_equalize_pallas)
+                                  mmse_equalize_pallas,
+                                  mmse_equalize_split,
+                                  mmse_equalize_split_pallas)
 from repro.pipelines.qr_solve import (qr_solve,  # noqa: F401
-                                      qr_solve_pallas, qr_solve_unfused)
+                                      qr_solve_blocked, qr_solve_pallas,
+                                      qr_solve_unfused)
 
 __all__ = [
     "cholesky_solve", "cholesky_solve_pallas", "cholesky_solve_unfused",
-    "qr_solve", "qr_solve_pallas", "qr_solve_unfused",
+    "cholesky_solve_blocked",
+    "qr_solve", "qr_solve_pallas", "qr_solve_unfused", "qr_solve_blocked",
     "mmse_equalize", "mmse_equalize_pallas", "mmse_equalize_composed",
+    "mmse_equalize_split", "mmse_equalize_split_pallas",
     "expand_complex_channel",
 ]

@@ -13,9 +13,22 @@ Nothing leaves VMEM between the four stages; the composed chain is what
 REVEL's ordered fine-grain regions buy over kernel-at-a-time dispatch
 (compare mmse_equalize_composed, the unfused baseline).
 
-Complex channels are handled by the standard real expansion
-[[Re, -Im], [Im, Re]] (see ``expand_complex_channel``), matching
-examples/dsp_pipeline.py.
+Complex channels are handled two ways:
+
+  * the standard real expansion [[Re, -Im], [Im, Re]] (see
+    ``expand_complex_channel``), matching examples/dsp_pipeline.py —
+    simple, but the expanded (2m x 2n) Gram GEMM does 16 m n^2 model
+    flops where the complex math needs 6;
+  * the split re/im fast path ``mmse_equalize_split``: Gram and matched
+    filter accumulated from the Re/Im planes directly
+    (G = Hr^T Hr + Hi^T Hi + i (Hr^T Hi - (Hr^T Hi)^T), exploiting the
+    Hermitian structure so the cross term is ONE GEMM), then the same
+    fused Cholesky-solve chain on the real-embedded 2n x 2n system.
+    Identical output layout [Re x; Im x], ~0.4x the GEMM flops — what a
+    production 5G PUSCH chain ships.  Registered as the
+    ``split_complex`` variant of the ``mmse_equalize`` spec; the
+    registry dispatcher picks it whenever a job presents 4 (split)
+    planes instead of one expanded matrix.
 """
 from __future__ import annotations
 
@@ -82,6 +95,117 @@ def mmse_equalize_pallas(h: jax.Array, y: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((bsz, n, k), y.dtype),
         interpret=interpret,
     )(h, y)
+
+
+def _mmse_split_kernel(hr_ref, hi_ref, yr_ref, yi_ref, x_ref, *, m: int,
+                       n: int, sigma2: float, eps: float):
+    hr = hr_ref[0]                                     # (m, n)
+    hi = hi_ref[0]                                     # (m, n)
+    yr = yr_ref[0]                                     # (m, k)
+    yi = yi_ref[0]                                     # (m, k)
+    f32 = jnp.float32
+    # ---- split Gram region (MXU): Gr = Hr^T Hr + Hi^T Hi as ONE dot on
+    # the stacked (2m, n) planes; Gi = C - C^T from the single cross GEMM
+    # C = Hr^T Hi (antisymmetry replaces the second cross dot).  6 m n^2
+    # model flops vs 16 m n^2 for the real-expansion Gram. ----
+    hs = jnp.concatenate([hr, hi], axis=0)             # (2m, n)
+    gr = jnp.dot(hs.T, hs, preferred_element_type=f32)
+    c = jnp.dot(hr.T, hi, preferred_element_type=f32)
+    gi = c - c.T
+    # ---- split matched filter: rhs_r = Hr^T yr + Hi^T yi and
+    # rhs_i = Hr^T yi - Hi^T yr, each one stacked dot ----
+    ys = jnp.concatenate([yr, yi], axis=0)             # (2m, k)
+    yt = jnp.concatenate([yi, -yr], axis=0)
+    rr = jnp.dot(hs.T, ys, preferred_element_type=f32)
+    ri = jnp.dot(hs.T, yt, preferred_element_type=f32)
+    # ---- real embedding of the Hermitian system: the SAME 2n x 2n SPD
+    # matrix the expansion path builds, assembled from n x n blocks ----
+    rows_n = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    gr = gr + sigma2 * (rows_n[:, None] == rows_n[None, :]).astype(gr.dtype)
+    g = jnp.concatenate(
+        [jnp.concatenate([gr, -gi], axis=1),
+         jnp.concatenate([gi, gr], axis=1)], axis=0)   # (2n, 2n)
+    rhs = jnp.concatenate([rr, ri], axis=0)            # (2n, k)
+    # ---- fused Cholesky solve, identical chain to the expansion path ----
+    rows = jax.lax.broadcasted_iota(jnp.int32, (2 * n,), 0)
+    thresh = pivot_threshold(g, rows, eps=eps)
+    g, rhs = jax.lax.fori_loop(
+        0, 2 * n,
+        lambda kk, carry: factor_forward_step(kk, carry[0], carry[1], rows,
+                                              thresh),
+        (g, rhs))
+    rhs = jax.lax.fori_loop(
+        0, 2 * n,
+        lambda i, z: back_substitution_step(i, g, z, rows, n=2 * n), rhs)
+    x_ref[0] = rhs.astype(yr.dtype)
+
+
+def mmse_equalize_split_pallas(hr: jax.Array, hi: jax.Array, yr: jax.Array,
+                               yi: jax.Array, *, sigma2: float = 0.1,
+                               eps: float = DEFAULT_EPS,
+                               interpret: bool | None = None) -> jax.Array:
+    """Split re/im fused MMSE equalizer — the complex-native fast path.
+
+    hr/hi: (B,M,N) channel planes, yr/yi: (B,M,K) observations ->
+    x: (B,2N,K) stacked [Re x; Im x] (the real-expansion output layout,
+    so both paths answer the same complex problem identically).  One
+    pallas_call per lane; ~0.4x the Gram/matched-filter GEMM flops of
+    ``mmse_equalize_pallas`` on the expanded system.
+    """
+    bsz, m, n = hr.shape
+    assert hi.shape == hr.shape, (hr.shape, hi.shape)
+    b2, m2, k = yr.shape
+    assert yi.shape == yr.shape, (yr.shape, yi.shape)
+    assert m == m2 and bsz == b2 and m >= n, (hr.shape, yr.shape)
+    if interpret is None:
+        interpret = interpret_default()
+    mat = pl.BlockSpec((1, m, n), lambda i: (i, 0, 0),
+                       memory_space=pltpu.VMEM)
+    obs = pl.BlockSpec((1, m, k), lambda i: (i, 0, 0),
+                       memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        functools.partial(_mmse_split_kernel, m=m, n=n, sigma2=sigma2,
+                          eps=eps),
+        grid=(bsz,),
+        in_specs=[mat, mat, obs, obs],
+        out_specs=pl.BlockSpec((1, 2 * n, k), lambda i: (i, 0, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((bsz, 2 * n, k), yr.dtype),
+        interpret=interpret,
+    )(hr, hi, yr, yi)
+
+
+def _mmse_split_xla(hr: jax.Array, hi: jax.Array, yr: jax.Array,
+                    yi: jax.Array, *, sigma2: float) -> jax.Array:
+    """XLA face of the split path, mirroring the kernel's dot structure
+    exactly (stacked Gram + single cross GEMM + two stacked matched
+    filters) — the HLO dot-flops counter sees the same 6 m n^2 + 8 m n k
+    model cost, which tests/benchmarks assert against the expansion."""
+    n = hr.shape[-1]
+    hs = jnp.concatenate([hr, hi], axis=1)             # (B, 2m, n)
+    gr = jnp.einsum("bmi,bmj->bij", hs, hs) \
+        + sigma2 * jnp.eye(n, dtype=hr.dtype)
+    c = jnp.einsum("bmi,bmj->bij", hr, hi)
+    gi = c - jnp.swapaxes(c, -1, -2)
+    ys = jnp.concatenate([yr, yi], axis=1)             # (B, 2m, k)
+    yt = jnp.concatenate([yi, -yr], axis=1)
+    rr = jnp.einsum("bmn,bmk->bnk", hs, ys)
+    ri = jnp.einsum("bmn,bmk->bnk", hs, yt)
+    g = jnp.concatenate(
+        [jnp.concatenate([gr, -gi], axis=2),
+         jnp.concatenate([gi, gr], axis=2)], axis=1)
+    rhs = jnp.concatenate([rr, ri], axis=1)
+    return jnp.linalg.solve(g, rhs)
+
+
+@partial(jax.jit, static_argnames=("sigma2", "backend"))
+def mmse_equalize_split(hr: jax.Array, hi: jax.Array, yr: jax.Array,
+                        yi: jax.Array, *, sigma2: float = 0.1,
+                        backend: str | None = None) -> jax.Array:
+    """Public split-complex wrapper with backend dispatch."""
+    if resolve_backend(backend) == "pallas":
+        return mmse_equalize_split_pallas(hr, hi, yr, yi, sigma2=sigma2)
+    return _mmse_split_xla(hr, hi, yr, yi, sigma2=sigma2)
 
 
 def mmse_equalize_composed(h: jax.Array, y: jax.Array, *,

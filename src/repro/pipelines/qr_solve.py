@@ -47,25 +47,18 @@ def reflect_step(k, r, y, rows, *, tiny: float = DEFAULT_TINY):
     return r, y
 
 
-def _qr_solve_kernel(a_ref, b_ref, x_ref, *, m: int, n: int,
-                     tiny: float):
-    r = a_ref[0]                                      # (m, n)
-    y = b_ref[0]                                      # (m, k)
-    rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
-    nref = min(n, m - 1) if m > 1 else 0
+def back_substitute_r(r, y, *, n: int, tiny: float):
+    """Back substitution on R[:n,:n] x = (Q^T b)[:n], shared by the
+    unblocked and blocked kernels.
 
-    r, y = jax.lax.fori_loop(
-        0, nref, lambda k, c: reflect_step(k, c[0], c[1], rows, tiny=tiny),
-        (r, y))
-
-    # ---- back substitution on R[:n,:n] x = (Q^T b)[:n] ----
+    Uses a relative deficiency threshold from R's diagonal: a pivot
+    below it marks a numerically dependent column, whose solution
+    component is ZEROED (clamping the divisor instead would overflow
+    float32: with R = [[0,1],[0,0]] a clamped 1/tiny cascades to inf
+    through the remaining rows).
+    """
     rows_n = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
     z = y[:n]
-    # relative deficiency threshold from R's diagonal: a pivot below it
-    # marks a numerically dependent column, whose solution component is
-    # ZEROED (clamping the divisor instead would overflow float32: with
-    # R = [[0,1],[0,0]] a clamped 1/tiny cascades to inf through the
-    # remaining rows)
     diag = jnp.abs(jnp.where(rows_n[:, None] == rows_n[None, :],
                              r[:n], 0.0).sum(axis=1))
     thresh = jnp.maximum(1e-6 * jnp.max(diag), tiny)
@@ -79,7 +72,21 @@ def _qr_solve_kernel(a_ref, b_ref, x_ref, *, m: int, n: int,
         col = jnp.where(rows_n < k, r[:n, k], 0.0)
         return z - col[:, None] * xk[None, :]
 
-    x_ref[0] = jax.lax.fori_loop(0, n, bwd, z)
+    return jax.lax.fori_loop(0, n, bwd, z)
+
+
+def _qr_solve_kernel(a_ref, b_ref, x_ref, *, m: int, n: int,
+                     tiny: float):
+    r = a_ref[0]                                      # (m, n)
+    y = b_ref[0]                                      # (m, k)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    nref = min(n, m - 1) if m > 1 else 0
+
+    r, y = jax.lax.fori_loop(
+        0, nref, lambda k, c: reflect_step(k, c[0], c[1], rows, tiny=tiny),
+        (r, y))
+
+    x_ref[0] = back_substitute_r(r, y, n=n, tiny=tiny)
 
 
 def qr_solve_pallas(a: jax.Array, b: jax.Array, *,
@@ -94,6 +101,120 @@ def qr_solve_pallas(a: jax.Array, b: jax.Array, *,
         interpret = interpret_default()
     return pl.pallas_call(
         functools.partial(_qr_solve_kernel, m=m, n=n, tiny=tiny),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, m, n), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, n, k), lambda i: (i, 0, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((bsz, n, k), b.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def _qr_panel_reflect_step(j, carry, *, o, m: int, rows, tiny: float):
+    """Reflector ``g = o + j`` built from and applied to the panel only;
+    (v, tau) accumulated for the compact-WY block apply."""
+    pan, v_acc, tau_acc = carry
+    g = o + j
+    x = jax.lax.dynamic_slice(pan, (0, j), (m, 1))[:, 0]
+    x = jnp.where(rows >= g, x, 0.0)                  # masked column (F4)
+    xk = jnp.take(x, g)
+    norm = jnp.sqrt(jnp.sum(x * x))
+    alpha = jnp.where(xk >= 0, -norm, norm)
+    v = x - alpha * (rows == g).astype(pan.dtype)
+    vnorm2 = jnp.maximum(jnp.sum(v * v), tiny)
+    tau = jnp.where(norm < tiny, 0.0, 2.0 / vnorm2)   # degenerate: skip
+    pan = pan - v[:, None] * (tau * (v @ pan))[None, :]
+    v_acc = jax.lax.dynamic_update_slice(v_acc, v[:, None], (0, j))
+    tau_acc = jax.lax.dynamic_update_slice(tau_acc, tau[None], (j,))
+    return pan, v_acc, tau_acc
+
+
+def _wy_t_step(j, t, *, vt_v, taus, cols_bs):
+    """Column ``j`` of the compact-WY ``T`` (LAPACK larft, forward
+    columnwise): T[:j, j] = -tau_j * T[:j, :j] @ (V^T v_j); T[j,j] =
+    tau_j.  Columns >= j of the carried ``t`` are still zero, so the
+    full-width dot only consumes finished columns."""
+    z = jax.lax.dynamic_slice(vt_v, (0, j), (vt_v.shape[0], 1))[:, 0]
+    z = jnp.where(cols_bs < j, z, 0.0)
+    tau_j = jnp.take(taus, j)
+    tcol = -tau_j * jnp.dot(t, z, preferred_element_type=jnp.float32)
+    tcol = jnp.where(cols_bs < j, tcol, 0.0)
+    tcol = tcol + tau_j * (cols_bs == j).astype(t.dtype)
+    return jax.lax.dynamic_update_slice(t, tcol[:, None], (0, j))
+
+
+def _qr_solve_blocked_kernel(a_ref, b_ref, x_ref, *, m: int, n: int,
+                             bs: int, tiny: float):
+    r = a_ref[0]                                      # (m, n)
+    y = b_ref[0]                                      # (m, k)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    cols_n = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    cols_bs = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+
+    def panel_step(p, carry):
+        r, y = carry
+        o = p * bs
+        # ---- panel factor: bs reflectors applied panel-locally ----
+        pan = jax.lax.dynamic_slice(r, (0, o), (m, bs))
+        pan, v, taus = jax.lax.fori_loop(
+            0, bs,
+            functools.partial(_qr_panel_reflect_step, o=o, m=m, rows=rows,
+                              tiny=tiny),
+            (pan, jnp.zeros((m, bs), r.dtype), jnp.zeros((bs,), r.dtype)))
+        r = jax.lax.dynamic_update_slice(r, pan, (0, o))
+        # ---- T build: one V^T V gram + bs short column steps ----
+        vt_v = jnp.dot(v.T, v, preferred_element_type=jnp.float32)
+        t = jax.lax.fori_loop(
+            0, bs,
+            functools.partial(_wy_t_step, vt_v=vt_v, taus=taus,
+                              cols_bs=cols_bs),
+            jnp.zeros((bs, bs), r.dtype))
+        # ---- block apply Q_p^T = I - V T^T V^T (critical MXU regions):
+        # the whole panel's reflectors hit the trailing columns and the
+        # rhs as three GEMMs instead of bs rank-1 updates ----
+        wr = jnp.dot(v.T, r, preferred_element_type=jnp.float32)
+        upd = jnp.dot(v, jnp.dot(t.T, wr,
+                                 preferred_element_type=jnp.float32),
+                      preferred_element_type=jnp.float32)
+        r = r - jnp.where(cols_n[None, :] >= o + bs, upd, 0.0)
+        wy = jnp.dot(v.T, y, preferred_element_type=jnp.float32)
+        y = y - jnp.dot(v, jnp.dot(t.T, wy,
+                                   preferred_element_type=jnp.float32),
+                        preferred_element_type=jnp.float32)
+        return r, y
+
+    r, y = jax.lax.fori_loop(0, n // bs, panel_step, (r, y))
+    x_ref[0] = back_substitute_r(r, y, n=n, tiny=tiny)
+
+
+def qr_solve_blocked(a: jax.Array, b: jax.Array, *, bs: int | None = None,
+                     tiny: float = DEFAULT_TINY,
+                     interpret: bool | None = None) -> jax.Array:
+    """Blocked (compact-WY) fused least squares — the large-n fast path.
+
+    Same contract as :func:`qr_solve_pallas` but the Householder
+    reflectors are accumulated per ``bs``-column panel into (V, T) and
+    applied to the trailing columns and right-hand sides as rank-``bs``
+    GEMMs (Q is still never formed).  Registered as the ``blocked``
+    variant of the ``qr_solve`` spec; the dispatcher picks it for
+    N >= 128.
+    """
+    bsz, m, n = a.shape
+    b2, m2, k = b.shape
+    assert m == m2 and bsz == b2 and m >= n, (a.shape, b.shape)
+    if bs is None:
+        bs = 64 if n % 64 == 0 else 32
+    assert n % bs == 0 and n >= bs, (n, bs)
+    if interpret is None:
+        interpret = interpret_default()
+    return pl.pallas_call(
+        functools.partial(_qr_solve_blocked_kernel, m=m, n=n, bs=bs,
+                          tiny=tiny),
         grid=(bsz,),
         in_specs=[
             pl.BlockSpec((1, m, n), lambda i: (i, 0, 0),

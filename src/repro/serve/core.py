@@ -66,9 +66,9 @@ class EngineCore:
     # ---------------- accounting ----------------
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
-                      padded: int) -> None:
+                      padded: int, variant: str = "base") -> None:
         self.recorder.record_launch(pipeline, shape, real, padded,
-                                    self.clock())
+                                    self.clock(), variant)
 
     def record_job(self, pipeline: str, item) -> None:
         """Stamp ``finished_at`` and log the job's latency sample."""
@@ -84,16 +84,22 @@ class EngineCore:
 
     # ---------------- batch lifecycle ----------------
 
-    def dispatch_group(self, spec, fn, key: tuple, jobs: list) -> list:
+    def dispatch_group(self, spec, fn, key: tuple, jobs: list,
+                       variant=None) -> list:
         """The one lane-group batch lifecycle, shared by every solver
-        engine: stack per-arg, pad to the pool from the spec's filler,
-        launch ``fn`` once, scatter per-lane results back onto the jobs,
-        and account the launch + per-job latencies."""
+        engine: stack per-arg, pad to the pool from the (variant's or
+        spec's) filler, launch ``fn`` once, scatter per-lane results back
+        onto the jobs, and account the launch + per-job latencies.
+
+        ``fn`` is the jit'd entry point the caller resolved through
+        ``KernelSpec.dispatch_key`` for this shape bucket; ``variant``
+        is the matching registry Variant (None = the spec's base)."""
         stacked = [np.stack([np.asarray(j.args[i]) for j in jobs])
                    for i in range(len(jobs[0].args))]
-        padded, pad = pad_group(spec, stacked, self.lanes)
+        padded, pad = pad_group(spec, stacked, self.lanes, variant=variant)
         res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
-        self.record_launch(spec.name, key, len(jobs), pad)
+        self.record_launch(spec.name, key, len(jobs), pad,
+                           variant.name if variant is not None else "base")
         for i, job in enumerate(jobs):
             job.out = res[i]
             self.record_job(spec.name, job)
@@ -128,27 +134,33 @@ class FifoEngineCore(EngineCore):
         return self.take(len(self._queue))
 
 
-def pad_group(spec, stacked: list[np.ndarray], lanes: int
+def pad_group(spec, stacked: list[np.ndarray], lanes: int, variant=None
               ) -> tuple[list[np.ndarray], int]:
     """Pad a stacked arg group's batch dim up to a multiple of ``lanes``
-    using the spec's declared benign filler.
+    using the spec's (or the dispatched variant's) declared benign filler.
 
     ``stacked`` holds one batched array per kernel argument.  Returns the
-    padded arrays and the pad count.  Raises if padding is needed but the
-    spec declares no filler — padding semantics are the kernel's to
-    declare, not the engine's to guess (the old "square 3-D arg ⇒ add
-    identity" heuristic is exactly what this replaces).
+    padded arrays and the pad count.  Raises if padding is needed but no
+    filler is declared — padding semantics are the kernel's to declare,
+    not the engine's to guess (the old "square 3-D arg ⇒ add identity"
+    heuristic is exactly what this replaces).  A variant with its own
+    calling convention (e.g. split-complex MMSE's 4 planes) declares its
+    own filler; variants that only change the execution schedule inherit
+    the spec's.
     """
     b = stacked[0].shape[0]
     pad = (-b) % lanes
     if pad == 0:
         return stacked, 0
-    if spec.filler is None:
+    filler = spec.filler
+    if variant is not None and variant.filler is not None:
+        filler = variant.filler
+    if filler is None:
         raise ValueError(
             f"pipeline {spec.name!r} declares no padding filler; cannot "
             f"pad a {b}-job group to the {lanes}-lane pool")
-    lane = spec.filler(tuple(a.shape[1:] for a in stacked),
-                       tuple(a.dtype for a in stacked))
+    lane = filler(tuple(a.shape[1:] for a in stacked),
+                  tuple(a.dtype for a in stacked))
     if len(lane) != len(stacked):
         raise ValueError(
             f"{spec.name!r} filler returned {len(lane)} arrays for "

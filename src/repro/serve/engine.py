@@ -1,10 +1,17 @@
 """Back-compat shim: the serving stack now lives in the ``repro.serve``
 package (core / decode / solver / mux / metrics).  Import from
 ``repro.serve`` directly in new code; this module keeps the original
-``repro.serve.engine`` import path working."""
-from repro.serve.core import EngineCore, ManualClock  # noqa: F401
-from repro.serve.mux import SolverMux  # noqa: F401
-from repro.serve.solver import PipelineEngine, SolveJob  # noqa: F401
+``repro.serve.engine`` import path working (with a DeprecationWarning)."""
+import warnings
+
+warnings.warn(
+    "repro.serve.engine is deprecated; import from repro.serve instead "
+    "(e.g. `from repro.serve import PipelineEngine, SolverMux`)",
+    DeprecationWarning, stacklevel=2)
+
+from repro.serve.core import EngineCore, ManualClock  # noqa: F401,E402
+from repro.serve.mux import SolverMux  # noqa: F401,E402
+from repro.serve.solver import PipelineEngine, SolveJob  # noqa: F401,E402
 
 __all__ = ["EngineCore", "ManualClock", "DecodeEngine", "Request",
            "SolverMux", "PipelineEngine", "SolveJob"]

@@ -61,13 +61,18 @@ class LatencyStats:
 
 @dataclasses.dataclass(frozen=True)
 class LaunchRecord:
-    """One dispatched grid: ``real + padded`` lanes went to the device."""
+    """One dispatched grid: ``real + padded`` lanes went to the device.
+
+    ``variant`` is the registry variant the dispatcher routed the lane
+    group to (``"base"`` for the spec's own entry point) — the per-launch
+    record behind :attr:`PipelineStats.dispatch_counts`."""
 
     pipeline: str
     shape: tuple
     real: int
     padded: int
     t: float
+    variant: str = "base"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +88,9 @@ class PipelineStats:
     padded_lane_waste: float     # padded lanes / dispatched lanes
     latency: LatencyStats
     throughput: float            # jobs/s over [first submit, last finish]
+    dispatch_counts: dict = dataclasses.field(default_factory=dict)
+    """Launches per registry variant name — the observable proof that a
+    bucket of large / split-complex jobs landed on the fast path."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,9 +118,11 @@ class Recorder:
             collections.defaultdict(list)
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
-                      padded: int, t: float) -> None:
+                      padded: int, t: float,
+                      variant: str = "base") -> None:
         self._launches.append(
-            LaunchRecord(pipeline, shape, int(real), int(padded), t))
+            LaunchRecord(pipeline, shape, int(real), int(padded), t,
+                         variant))
 
     def record_job(self, pipeline: str, submitted_at: float,
                    finished_at: float) -> None:
@@ -143,7 +153,9 @@ class Recorder:
                 padded_lane_waste=(padded / dispatched) if dispatched
                 else 0.0,
                 latency=lat,
-                throughput=thr)
+                throughput=thr,
+                dispatch_counts=dict(collections.Counter(
+                    l.variant for l in launches)))
         return MetricsSnapshot(
             pipelines=per,
             launches=tuple(self._launches),

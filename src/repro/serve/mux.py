@@ -6,7 +6,11 @@ that interleaved stream and serves it with the paper's lane model:
 
   * **routing** — each submitted job names its pipeline; the kernel
     registry resolves it to a per-pipeline :class:`_LanePool` (created
-    lazily, one jit'd program per pipeline × shape bucket).
+    lazily), and each shape bucket resolves through
+    ``KernelSpec.dispatch`` to a performance variant (one jit'd program
+    per pipeline × variant × shape bucket) — n >= 128 buckets serve from
+    the blocked kernels, 4-plane MMSE buckets from the split-complex
+    fast path, without the caller choosing anything.
   * **shape buckets** — within a pool, jobs are bucketed by their
     per-arg (shape, dtype) key; only bucket-mates share a lane group.
   * **continuous batching** — ``poll(now)`` dispatches full lane groups
@@ -34,14 +38,13 @@ replays).
 """
 from __future__ import annotations
 
-import functools
 import math
 
-import jax
 import numpy as np
 
 from repro.serve.core import EngineCore
-from repro.serve.solver import SolveJob, resolve_pipeline_spec
+from repro.serve.solver import (SolveJob, VariantDispatcher,
+                                resolve_pipeline_spec)
 
 
 def _bucket_priority(jobs: list[SolveJob]) -> tuple:
@@ -54,12 +57,15 @@ def _bucket_priority(jobs: list[SolveJob]) -> tuple:
 
 
 class _LanePool:
-    """Per-pipeline lane pool: jit'd kernel + shape buckets (lists of
-    queued jobs keyed by per-arg shape/dtype)."""
+    """Per-pipeline lane pool: variant dispatcher + shape buckets (lists
+    of queued jobs keyed by per-arg shape/dtype).  Each bucket resolves
+    through ``KernelSpec.dispatch`` — one compiled program per variant x
+    shape bucket, so large / split-complex buckets transparently serve
+    from the fast variant."""
 
     def __init__(self, spec, options: dict):
         self.spec = spec
-        self.fn = jax.jit(functools.partial(spec.pallas, **options))
+        self.dispatcher = VariantDispatcher(spec, options)
         self.buckets: dict[tuple, list[SolveJob]] = {}
 
     def enqueue(self, job: SolveJob) -> None:
@@ -141,13 +147,16 @@ class SolverMux(EngineCore):
         """Dispatch a bucket in lane-group chunks.  ``full_only`` leaves
         the trailing partial chunk queued (continuous-batching path)."""
         jobs = pool.buckets[key]
+        variant, fn = pool.dispatcher.resolve(key)
         done: list[SolveJob] = []
         while len(jobs) >= self.lanes:
             chunk, jobs = jobs[:self.lanes], jobs[self.lanes:]
-            done.extend(self.dispatch_group(pool.spec, pool.fn, key, chunk))
+            done.extend(self.dispatch_group(pool.spec, fn, key, chunk,
+                                            variant=variant))
         if jobs and not full_only:
             chunk, jobs = jobs, []
-            done.extend(self.dispatch_group(pool.spec, pool.fn, key, chunk))
+            done.extend(self.dispatch_group(pool.spec, fn, key, chunk,
+                                            variant=variant))
         if jobs:
             pool.buckets[key] = jobs
         else:

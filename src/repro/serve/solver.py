@@ -56,22 +56,55 @@ def resolve_pipeline_spec(pipeline: str):
     return spec
 
 
+class VariantDispatcher:
+    """Shape-bucket -> (Variant, jit'd fn) resolution with a per-variant
+    compile cache, shared by PipelineEngine and the SolverMux pools.
+
+    Every serve-side launch goes through :meth:`resolve` — the engines
+    never touch ``spec.pallas`` directly — so a bucket of large or
+    split-complex jobs transparently lands on the registry's fast
+    variant, with one compiled program per variant x shape bucket.
+    ``options`` (e.g. ``sigma2``) are bound into every variant entry
+    point alike.
+    """
+
+    def __init__(self, spec, options: dict | None = None):
+        self.spec = spec
+        self.options = dict(options or {})
+        self._fns: dict[str, object] = {}
+
+    def resolve(self, key: tuple):
+        """``key`` is a SolveJob.shape_key(): per-arg ((shape, dtype)).
+        Returns the dispatched registry Variant and its jit'd, options-
+        bound entry point."""
+        shapes = tuple(shape for shape, _ in key)
+        dtypes = tuple(np.dtype(dt) for _, dt in key)
+        variant = self.spec.dispatch_key(shapes, dtypes)
+        fn = self._fns.get(variant.name)
+        if fn is None:
+            fn = jax.jit(functools.partial(variant.fn, **self.options))
+            self._fns[variant.name] = fn
+        return variant, fn
+
+
 class PipelineEngine(FifoEngineCore):
     """Batched solver service over a single registered pipeline.
 
     Jobs are grouped by problem shape, stacked, padded to a multiple of
     the ``lanes`` pool size with the spec's declared benign filler
     (padded lanes' results are discarded), and executed as one grid
-    launch per group.  ``pipeline`` is any ``kind="pipeline"`` name in
-    the kernel registry; extra keyword ``options`` (e.g. ``sigma2`` for
-    mmse_equalize) are bound into the served kernel.
+    launch per group, routed through ``KernelSpec.dispatch`` so each
+    shape group lands on the right performance variant.  ``pipeline`` is
+    any ``kind="pipeline"`` name in the kernel registry; extra keyword
+    ``options`` (e.g. ``sigma2`` for mmse_equalize) are bound into the
+    served kernel.
     """
 
     def __init__(self, pipeline: str = "cholesky_solve", lanes: int = 8,
                  clock=None, **options):
         super().__init__(lanes, clock=clock)
         self.spec = resolve_pipeline_spec(pipeline)
-        self._fn = jax.jit(functools.partial(self.spec.pallas, **options))
+        self._dispatcher = VariantDispatcher(self.spec, options)
 
     def submit(self, job: SolveJob) -> SolveJob:
         job.pipeline = self.spec.name
@@ -83,5 +116,7 @@ class PipelineEngine(FifoEngineCore):
         for job in self.drain():
             groups[job.shape_key()].append(job)
         for key, jobs in groups.items():
-            done.extend(self.dispatch_group(self.spec, self._fn, key, jobs))
+            variant, fn = self._dispatcher.resolve(key)
+            done.extend(self.dispatch_group(self.spec, fn, key, jobs,
+                                            variant=variant))
         return done

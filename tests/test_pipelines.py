@@ -14,7 +14,7 @@ from repro.pipelines import (cholesky_solve_pallas, cholesky_solve_unfused,
                              expand_complex_channel, mmse_equalize_composed,
                              mmse_equalize_pallas, qr_solve_pallas,
                              qr_solve_unfused)
-from repro.serve.engine import PipelineEngine, SolveJob
+from repro.serve import PipelineEngine, SolveJob
 
 from conftest import assert_close
 

@@ -5,7 +5,7 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.models import transformer as T
-from repro.serve.engine import DecodeEngine, Request
+from repro.serve import DecodeEngine, Request
 
 
 @pytest.fixture(scope="module")

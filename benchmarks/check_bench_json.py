@@ -40,8 +40,22 @@ def check(path: str) -> None:
     for rec in payload["variants"]:
         assert rec["model_flops"] > 0, f"zero model flops: {rec}"
         assert rec["wall_us"] > 0, f"zero wall-clock: {rec}"
+
+    # HBM-scale coverage: every pipeline carrying a ``tiled`` variant
+    # must have exercised it at n >= 512 — the large-shape path silently
+    # shrinking back to midrange sizes is a regression, not a rename.
+    tiled_specs = [spec.name for spec in K.specs(kind="pipeline")
+                   if any(v.name == "tiled" for v in spec.variants)]
+    assert tiled_specs, "no pipeline registers a tiled variant"
+    for name in tiled_specs:
+        big = [rec for rec in payload["variants"]
+               if rec["pipeline"] == name and rec["variant"] == "tiled"
+               and rec["n"] >= 512 and rec.get("dispatches", 0) > 0]
+        assert big, (f"{name}: tiled variant not exercised at n >= 512 "
+                     "(HBM-scale coverage lost)")
     print(f"{path}: ok — {len(payload['rows'])} rows, "
-          f"{len(expected)} pipeline variants all exercised")
+          f"{len(expected)} pipeline variants all exercised, "
+          f"tiled at n>=512 on {sorted(tiled_specs)}")
 
 
 if __name__ == "__main__":

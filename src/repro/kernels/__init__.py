@@ -353,6 +353,33 @@ def _register_all() -> None:
         return (len(shapes) == 2 and len(shapes[0]) == 2
                 and shapes[0][-1] >= 128 and shapes[0][-1] % 32 == 0)
 
+    def _tiled_when(shapes, dtypes):
+        """HBM-scale tiled applicability: two (matrix, rhs) args at
+        n >= 512 tiling evenly into the (n, bs) DMA slabs (bs falls
+        back 128 -> 64 -> 32, so n % 32 == 0 suffices — the same
+        divisibility the blocked kernels need, ensuring NO n >= 512
+        shape the registry can serve falls back to a whole-matrix VMEM
+        kernel).  Listed BEFORE ``blocked`` in each variants table so
+        large shapes leave VMEM-residency behind; the midrange stays on
+        the blocked kernels."""
+        return (len(shapes) == 2 and len(shapes[0]) == 2
+                and shapes[0][-1] >= 512 and shapes[0][-1] % 32 == 0)
+
+    # One lane and a narrow rhs keep the n >= 512 registry cases cheap
+    # enough for CI's interpret-mode dispatch sweep while still proving
+    # the HBM-resident path end to end.
+    def _chol_tiled_case(rng, n):
+        a = jnp.asarray(_spd(rng, 1, n))
+        b = jnp.asarray(rng.standard_normal((1, n, 2)).astype(np.float32))
+        return a, b
+
+    def _tall_tiled_case(rng, n):
+        a = jnp.asarray(rng.standard_normal((1, n + 16, n))
+                        .astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((1, n + 16, 2))
+                        .astype(np.float32))
+        return a, b
+
     def _chol_solve_case(rng, n):
         a = jnp.asarray(_spd(rng, 2, n))
         b = jnp.asarray(rng.standard_normal((2, n, 3))
@@ -373,10 +400,13 @@ def _register_all() -> None:
         sizes=(8, 12, 16, 24, 32), kind="pipeline",
         filler=_identity_system_filler,
         flops=_chol_solve_flops,
-        variants=(Variant(
-            name="blocked", fn=pp.cholesky_solve_blocked,
-            when=_blocked_when, sizes=(128, 256),
-            flops=_chol_solve_flops),)))
+        variants=(
+            Variant(name="tiled", fn=pp.cholesky_solve_tiled,
+                    when=_tiled_when, make_case=_chol_tiled_case,
+                    sizes=(512, 1024), flops=_chol_solve_flops),
+            Variant(name="blocked", fn=pp.cholesky_solve_blocked,
+                    when=_blocked_when, sizes=(128, 256),
+                    flops=_chol_solve_flops))))
 
     def _qr_solve_case(rng, n):
         a = jnp.asarray(rng.standard_normal((2, n + 4, n))
@@ -401,10 +431,13 @@ def _register_all() -> None:
         sizes=(8, 12, 16, 24, 32), kind="pipeline",
         filler=_identity_system_filler,
         flops=_qr_solve_flops,
-        variants=(Variant(
-            name="blocked", fn=pp.qr_solve_blocked,
-            when=_blocked_when, sizes=(128, 256),
-            flops=_qr_solve_flops),)))
+        variants=(
+            Variant(name="tiled", fn=pp.qr_solve_tiled,
+                    when=_tiled_when, make_case=_tall_tiled_case,
+                    sizes=(512, 1024), flops=_qr_solve_flops),
+            Variant(name="blocked", fn=pp.qr_solve_blocked,
+                    when=_blocked_when, sizes=(128, 256),
+                    flops=_qr_solve_flops))))
 
     def _mmse_case(rng, n):
         h = jnp.asarray(rng.standard_normal((2, n + 4, n))
@@ -458,15 +491,19 @@ def _register_all() -> None:
         sizes=(8, 12, 16, 24, 32), kind="pipeline",
         filler=_identity_system_filler,
         flops=_mmse_flops,
-        variants=(Variant(
-            name="split_complex", fn=pp.mmse_equalize_split_pallas,
-            when=_mmse_split_when,
-            oracle=lambda hr, hi, yr, yi: ref.mmse_equalize_split(
-                hr, hi, yr, yi, sigma2=0.1),
-            filler=_mmse_split_filler,
-            make_case=_mmse_split_case,
-            sizes=(8, 16, 24),
-            flops=_mmse_split_flops),)))
+        variants=(
+            Variant(name="split_complex",
+                    fn=pp.mmse_equalize_split_pallas,
+                    when=_mmse_split_when,
+                    oracle=lambda hr, hi, yr, yi: ref.mmse_equalize_split(
+                        hr, hi, yr, yi, sigma2=0.1),
+                    filler=_mmse_split_filler,
+                    make_case=_mmse_split_case,
+                    sizes=(8, 16, 24),
+                    flops=_mmse_split_flops),
+            Variant(name="tiled", fn=pp.mmse_equalize_tiled,
+                    when=_tiled_when, make_case=_tall_tiled_case,
+                    sizes=(512, 1024), flops=_mmse_flops))))
 
 
 def get(name: str) -> KernelSpec:

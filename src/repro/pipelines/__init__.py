@@ -31,28 +31,40 @@ tests, benchmarks, and the serve engine enumerate them uniformly.
 
 Each pipeline additionally registers performance *variants* the registry
 dispatcher (``KernelSpec.dispatch``) selects by shape/arity: blocked
-(``pl.BlockSpec``-tiled right-looking) ``cholesky_solve_blocked`` /
-``qr_solve_blocked`` for n >= 128, and the split re/im
-``mmse_equalize_split`` fast path for jobs arriving as 4 complex planes.
+(schedule-tiled, whole matrix VMEM-resident) ``cholesky_solve_blocked``
+/ ``qr_solve_blocked`` for the 128 <= n < 512 midrange, true
+sub-matrix-tiled ``cholesky_solve_tiled`` / ``qr_solve_tiled`` /
+``mmse_equalize_tiled`` (HBM-resident matrix, O(n*bs) VMEM slabs, DMA'd
+per grid cell) for n >= 512, and the split re/im ``mmse_equalize_split``
+fast path for jobs arriving as 4 complex planes.
 """
 from repro.pipelines.cholesky_solve import (cholesky_solve,  # noqa: F401
                                             cholesky_solve_blocked,
                                             cholesky_solve_pallas,
-                                            cholesky_solve_unfused)
+                                            cholesky_solve_tiled,
+                                            cholesky_solve_unfused,
+                                            tiled_vmem_floats)
 from repro.pipelines.mmse import (expand_complex_channel,  # noqa: F401
-                                  mmse_equalize, mmse_equalize_composed,
+                                  mmse_equalize, mmse_equalize_blocked,
+                                  mmse_equalize_composed,
                                   mmse_equalize_pallas,
                                   mmse_equalize_split,
-                                  mmse_equalize_split_pallas)
+                                  mmse_equalize_split_pallas,
+                                  mmse_equalize_tiled,
+                                  mmse_tiled_vmem_floats)
 from repro.pipelines.qr_solve import (qr_solve,  # noqa: F401
                                       qr_solve_blocked, qr_solve_pallas,
-                                      qr_solve_unfused)
+                                      qr_solve_tiled, qr_solve_unfused,
+                                      qr_tiled_vmem_floats)
 
 __all__ = [
     "cholesky_solve", "cholesky_solve_pallas", "cholesky_solve_unfused",
-    "cholesky_solve_blocked",
+    "cholesky_solve_blocked", "cholesky_solve_tiled",
     "qr_solve", "qr_solve_pallas", "qr_solve_unfused", "qr_solve_blocked",
+    "qr_solve_tiled",
     "mmse_equalize", "mmse_equalize_pallas", "mmse_equalize_composed",
     "mmse_equalize_split", "mmse_equalize_split_pallas",
+    "mmse_equalize_tiled", "mmse_equalize_blocked",
     "expand_complex_channel",
+    "tiled_vmem_floats", "qr_tiled_vmem_floats", "mmse_tiled_vmem_floats",
 ]

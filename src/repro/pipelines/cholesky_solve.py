@@ -288,6 +288,281 @@ def cholesky_solve_blocked(a: jax.Array, b: jax.Array, *,
     )(a, b)
 
 
+# ---------------------------------------------------------------------------
+# True sub-matrix tiling: HBM-resident trailing matrix, O(n*bs) VMEM
+# ---------------------------------------------------------------------------
+#
+# The ``blocked`` kernel above tiles the *schedule* but still holds the
+# whole (n, n) matrix in one VMEM block, capping it near n = 512.  The
+# ``tiled`` kernel below tiles the *data*: the matrix lives in HBM (a
+# ``pltpu.ANY`` ref) and every grid cell DMAs exactly one (n, bs) column
+# slab into VMEM scratch, so the per-cell working set is O(n*bs) and
+# n = 1024/2048 fit.  Grid = (lanes, steps + 1, tiles) with
+# steps = tiles = n // bs:
+#
+#   cell (i, s, t) with s < steps, t == s   panel cell: factor panel s
+#     (bs fused factor+forward-subst columns) from the double-buffered
+#     panel carry, stash the factored panel for the trailing cells, and
+#     DMA it out to the HBM factor buffer.
+#   cell (i, s, t) with s < steps, t > s    trailing cell: DMA slab t in,
+#     apply the panel's rank-bs SYRK update, DMA it back out.  The slab
+#     for t == s + 1 is additionally stashed into the *other* half of the
+#     panel-carry scratch — the next panel cell factors straight from
+#     VMEM instead of round-tripping HBM (double-buffered panel carry).
+#   cell (i, steps, t)                      back-substitution cell: slabs
+#     re-streamed in REVERSE (rt = steps-1-t); the L^T solve is
+#     left-looking per column slab, so each cell needs only its own slab.
+#
+# Cells with t < s are idle (no DMA, no compute) — the price of a
+# rectangular grid over a triangular iteration space, exactly the
+# paper's inductive-domain shape.
+
+def _tiled_trailing_update(slab, pan, t, *, o, bs: int, rows):
+    """Rank-``bs`` SYRK of factored panel ``pan`` onto column slab ``t``:
+    slab[r, j] -= sum_p pan[r, p] * pan[t*bs + j, p] for rows r below the
+    panel (rows >= o + bs).  ``o``/``t`` may be traced grid values."""
+    pt = jax.lax.dynamic_slice(pan, (t * bs, 0), (bs, pan.shape[1]))
+    pm = jnp.where(rows[:, None] >= o + bs, pan, 0.0)
+    return slab - jnp.dot(pm, pt.T, preferred_element_type=jnp.float32)
+
+
+def _tiled_backsub_step(slab, z, rt, *, bs: int, m: int, rows):
+    """Left-looking block step of the L^T back substitution on column
+    slab ``rt`` (slabs processed in reverse): subtract the contributions
+    of the already-solved components below, then solve the (bs, bs)
+    diagonal block.  Only THIS slab is touched — O(n*bs) working set."""
+    o = rt * bs
+    below = jnp.where(rows[:, None] >= o + bs, slab, 0.0)
+    corr = jnp.dot(below.T, z, preferred_element_type=jnp.float32)
+    zt = jax.lax.dynamic_slice(z, (o, 0), (bs, m)) - corr
+    lb = jax.lax.dynamic_slice(slab, (o, 0), (bs, slab.shape[1]))
+    rows_bs = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+    xt = jax.lax.fori_loop(
+        0, bs,
+        lambda i, zz: back_substitution_step(i, lb, zz, rows_bs, n=bs),
+        zt)
+    return jax.lax.dynamic_update_slice(z, xt, (o, 0))
+
+
+def _pan_read(pan_scr, half):
+    """Read one half of the double-buffered panel carry (``half`` is a
+    traced 0/1 value; refs cannot be selected dynamically, values can)."""
+    return jnp.where(half == 0, pan_scr[0], pan_scr[1])
+
+
+def _pan_write(pan_scr, half, val):
+    @pl.when(half == 0)
+    def _w0():
+        pan_scr[0] = val
+
+    @pl.when(half != 0)
+    def _w1():
+        pan_scr[1] = val
+
+
+# Per-cell VMEM ceiling for the tiled kernels: stay comfortably inside
+# a TPU core's ~16 MiB vector memory (double-buffered DMA slack left).
+TILED_VMEM_BUDGET_BYTES = 14 * 2 ** 20
+
+
+def tiled_block_size(n: int) -> int:
+    """Default slab width: the largest of {128, 64, 32} dividing n, so
+    every n % 32 == 0 shape the dispatcher can route here (the variant
+    predicate's requirement) actually tiles — n = 1888 must not fall
+    back to a whole-matrix VMEM kernel for want of a 64-divisor."""
+    for bs in (128, 64, 32):
+        if n % bs == 0:
+            return bs
+    raise ValueError(f"n={n} does not tile into 32-wide slabs")
+
+
+def tiled_vmem_floats(n: int, bs: int, m: int) -> int:
+    """Per-grid-cell VMEM working set of the tiled solve, in float32
+    elements — the single source of truth for the kernel's scratch and
+    block declarations, asserted O(n*bs) by the test suite and enforced
+    against :data:`TILED_VMEM_BUDGET_BYTES` at call time.
+
+      slab scratch (n, bs) + double-buffered panel carry (2, n, bs)
+      + rhs carry (n, m) + b block (n, m) + x block (n, m)
+    """
+    return 3 * n * bs + 3 * n * m
+
+
+def _tiled_factor_cell(i, s2, t, *, first_hbm, work_hbm, slab_scr,
+                       pan_scr, y_scr, sem, thresh, n: int, m: int,
+                       bs: int, rows, cols_bs):
+    """One factor-phase grid cell (panel at t == s2, trailing at
+    t > s2) of the tiled right-looking Cholesky — shared by
+    ``cholesky_solve_tiled`` and the factor phase of
+    ``mmse_equalize_tiled``.  ``first_hbm`` is where a slab's FIRST read
+    comes from (the raw input for the Cholesky pipeline, the work buffer
+    itself for MMSE, whose Gram phase already wrote it); every later
+    read and every write go to ``work_hbm``."""
+    @pl.when(t == s2)
+    def _panel():
+        @pl.when(s2 == 0)                 # first panel: no stash yet
+        def _first():
+            cp = pltpu.make_async_copy(first_hbm.at[i, :, pl.ds(0, bs)],
+                                       slab_scr, sem)
+            cp.start()
+            cp.wait()
+            pan_scr[0] = slab_scr[...]
+
+        half = s2 % 2
+        c = _pan_read(pan_scr, half)      # pre-updated panel slab
+        c, y = jax.lax.fori_loop(
+            0, bs,
+            functools.partial(_panel_factor_forward_step, o=s2 * bs, n=n,
+                              m=m, rows=rows, cols_bs=cols_bs,
+                              thresh=thresh),
+            (c, y_scr[...]))
+        _pan_write(pan_scr, half, c)      # trailing cells read this
+        y_scr[...] = y
+        slab_scr[...] = c
+        cp = pltpu.make_async_copy(
+            slab_scr, work_hbm.at[i, :, pl.ds(s2 * bs, bs)], sem)
+        cp.start()
+        cp.wait()
+
+    @pl.when(t > s2)
+    def _trailing():
+        @pl.when(s2 == 0)
+        def _from_first():
+            cp = pltpu.make_async_copy(
+                first_hbm.at[i, :, pl.ds(t * bs, bs)], slab_scr, sem)
+            cp.start()
+            cp.wait()
+
+        @pl.when(s2 > 0)
+        def _from_work():
+            cp = pltpu.make_async_copy(
+                work_hbm.at[i, :, pl.ds(t * bs, bs)], slab_scr, sem)
+            cp.start()
+            cp.wait()
+
+        pan = _pan_read(pan_scr, s2 % 2)
+        slab = _tiled_trailing_update(slab_scr[...], pan, t, o=s2 * bs,
+                                      bs=bs, rows=rows)
+        slab_scr[...] = slab
+        cp = pltpu.make_async_copy(
+            slab_scr, work_hbm.at[i, :, pl.ds(t * bs, bs)], sem)
+        cp.start()
+        cp.wait()
+
+        @pl.when(t == s2 + 1)             # double-buffered panel carry
+        def _stash():
+            _pan_write(pan_scr, (s2 + 1) % 2, slab)
+
+
+def _tiled_backsub_cell(i, t, *, steps: int, work_hbm, slab_scr, y_scr,
+                        x_ref, sem, bs: int, m: int, rows):
+    """One back-substitution grid cell (reverse slab order) of the tiled
+    L^T solve, shared by the Cholesky and MMSE tiled kernels; the last
+    cell writes the solution block."""
+    rt = steps - 1 - t
+    cp = pltpu.make_async_copy(work_hbm.at[i, :, pl.ds(rt * bs, bs)],
+                               slab_scr, sem)
+    cp.start()
+    cp.wait()
+    z = _tiled_backsub_step(slab_scr[...], y_scr[...], rt, bs=bs,
+                            m=m, rows=rows)
+    y_scr[...] = z
+
+    @pl.when(t == steps - 1)
+    def _finish():
+        x_ref[0] = z.astype(x_ref.dtype)
+
+
+def _cholesky_solve_tiled_kernel(thr_ref, a_hbm, b_ref, x_ref, l_hbm,
+                                 slab_scr, pan_scr, y_scr, sem, *,
+                                 n: int, m: int, bs: int, steps: int):
+    i = pl.program_id(0)
+    s = pl.program_id(1)                  # panel step; == steps: back-sub
+    t = pl.program_id(2)                  # column tile
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    cols_bs = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+
+    @pl.when((s == 0) & (t == 0))
+    def _init():
+        y_scr[...] = b_ref[0].astype(jnp.float32)
+
+    @pl.when(s < steps)
+    def _factor():
+        _tiled_factor_cell(i, s, t, first_hbm=a_hbm, work_hbm=l_hbm,
+                           slab_scr=slab_scr, pan_scr=pan_scr,
+                           y_scr=y_scr, sem=sem, thresh=thr_ref[0, 0],
+                           n=n, m=m, bs=bs, rows=rows, cols_bs=cols_bs)
+
+    @pl.when(s == steps)
+    def _backsub():
+        _tiled_backsub_cell(i, t, steps=steps, work_hbm=l_hbm,
+                            slab_scr=slab_scr, y_scr=y_scr, x_ref=x_ref,
+                            sem=sem, bs=bs, m=m, rows=rows)
+
+
+def cholesky_solve_tiled(a: jax.Array, b: jax.Array, *,
+                         bs: int | None = None, eps: float = DEFAULT_EPS,
+                         interpret: bool | None = None) -> jax.Array:
+    """True sub-matrix tiled fused SPD solve — the HBM-scale fast path.
+
+    Same contract as :func:`cholesky_solve_pallas` (a: (B,N,N) SPD,
+    b: (B,N,M) -> x), but the matrix never sits whole in VMEM: per grid
+    cell exactly one (N, bs) column slab is DMA'd in (plus the
+    double-buffered panel carry), the trailing matrix stays HBM-resident
+    in a ``pltpu.ANY`` work buffer, and the per-cell working set is
+    ``tiled_vmem_floats(n, bs, m)`` = O(N*bs).  The deficiency threshold
+    is precomputed host-side (one fused O(N) diagonal reduction) because
+    the first panel cell needs it before any other slab is seen.
+    Registered as the ``tiled`` variant of the ``cholesky_solve`` spec;
+    the dispatcher picks it for N >= 512.
+    """
+    bsz, n, n2 = a.shape
+    b2, n3, m = b.shape
+    assert n == n2 == n3 and bsz == b2, (a.shape, b.shape)
+    if bs is None:
+        bs = tiled_block_size(n)
+    assert n % bs == 0 and n >= 2 * bs, (n, bs)
+    assert tiled_vmem_floats(n, bs, m) * 4 <= TILED_VMEM_BUDGET_BYTES, \
+        (n, bs, m)
+    if interpret is None:
+        interpret = interpret_default()
+    steps = n // bs
+    diag = jnp.diagonal(a, axis1=-2, axis2=-1)
+    thr = jnp.maximum(eps * jnp.max(diag, axis=-1), 1e-30)
+    thr = thr.astype(jnp.float32).reshape(bsz, 1)
+    x, _ = pl.pallas_call(
+        functools.partial(_cholesky_solve_tiled_kernel, n=n, m=m, bs=bs,
+                          steps=steps),
+        grid=(bsz, steps + 1, steps),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, s, t: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, n, m), lambda i, s, t: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, m), lambda i, s, t: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n, m), b.dtype),
+            jax.ShapeDtypeStruct((bsz, n, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, bs), jnp.float32),
+            pltpu.VMEM((2, n, bs), jnp.float32),
+            pltpu.VMEM((n, m), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(thr, a, b)
+    return x
+
+
 def cholesky_solve_unfused(a: jax.Array, b: jax.Array, *,
                            interpret: bool | None = None) -> jax.Array:
     """The no-fusion baseline: factor-then-solve via THREE separate

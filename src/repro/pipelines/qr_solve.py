@@ -23,9 +23,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import interpret_default, resolve_backend
+from repro.kernels.common import (interpret_default, resolve_backend,
+                                  tpu_compiler_params)
 from repro.kernels.qr import qr_pallas
 from repro.kernels.trisolve import trisolve_pallas
+from repro.pipelines.cholesky_solve import (TILED_VMEM_BUDGET_BYTES,
+                                            _pan_read, _pan_write,
+                                            tiled_block_size)
 
 DEFAULT_TINY = 1e-20
 
@@ -47,21 +51,25 @@ def reflect_step(k, r, y, rows, *, tiny: float = DEFAULT_TINY):
     return r, y
 
 
-def back_substitute_r(r, y, *, n: int, tiny: float):
+def back_substitute_r(r, y, *, n: int, tiny: float, thresh=None):
     """Back substitution on R[:n,:n] x = (Q^T b)[:n], shared by the
-    unblocked and blocked kernels.
+    unblocked, blocked, and tiled kernels.
 
     Uses a relative deficiency threshold from R's diagonal: a pivot
     below it marks a numerically dependent column, whose solution
     component is ZEROED (clamping the divisor instead would overflow
     float32: with R = [[0,1],[0,0]] a clamped 1/tiny cascades to inf
-    through the remaining rows).
+    through the remaining rows).  ``thresh`` overrides the local
+    diagonal-derived threshold — the tiled kernel solves one (bs, bs)
+    diagonal block at a time, so it passes the GLOBAL R-diagonal
+    threshold accumulated during the panel sweep.
     """
     rows_n = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
     z = y[:n]
-    diag = jnp.abs(jnp.where(rows_n[:, None] == rows_n[None, :],
-                             r[:n], 0.0).sum(axis=1))
-    thresh = jnp.maximum(1e-6 * jnp.max(diag), tiny)
+    if thresh is None:
+        diag = jnp.abs(jnp.where(rows_n[:, None] == rows_n[None, :],
+                                 r[:n], 0.0).sum(axis=1))
+        thresh = jnp.maximum(1e-6 * jnp.max(diag), tiny)
 
     def bwd(i, z):
         k = n - 1 - i
@@ -227,6 +235,199 @@ def qr_solve_blocked(a: jax.Array, b: jax.Array, *, bs: int | None = None,
         out_shape=jax.ShapeDtypeStruct((bsz, n, k), b.dtype),
         interpret=interpret,
     )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# True sub-matrix tiling: HBM-resident trailing matrix, O(m*bs) VMEM
+# ---------------------------------------------------------------------------
+#
+# Same data-tiling scheme as ``cholesky_solve_tiled`` (see the long
+# comment there): grid = (lanes, steps + 1, tiles) with
+# steps = tiles = n // bs, the (m, n) matrix HBM-resident in a
+# ``pltpu.ANY`` work buffer, one (m, bs) column slab DMA'd per cell.
+# The panel cell factors bs Householder reflectors panel-locally,
+# accumulates compact-WY (V, T) in VMEM scratch, and applies the block
+# reflector to the right-hand sides; trailing cells stream their slab
+# through the rank-bs block apply; the final phase back-substitutes R
+# right-looking over reverse-streamed slabs (each cell solves its
+# (bs, bs) diagonal block against the GLOBAL deficiency threshold
+# accumulated in SMEM during the panel sweep, then pushes the update to
+# the rows above).
+
+def qr_tiled_vmem_floats(m: int, n: int, bs: int, k: int) -> int:
+    """Per-grid-cell VMEM working set of the tiled least squares, in
+    float32 elements — slab (m, bs) + panel carry (2, m, bs) + V (m, bs)
+    + T (bs, bs) + rhs carry (m, k) + b block (m, k) + x block (n, k)."""
+    return 4 * m * bs + bs * bs + 2 * m * k + n * k
+
+
+def _qr_solve_tiled_kernel(a_hbm, b_ref, x_ref, r_hbm, slab_scr, pan_scr,
+                           v_scr, t_scr, y_scr, dmax_scr, sem, *, m: int,
+                           n: int, k: int, bs: int, steps: int,
+                           tiny: float):
+    i = pl.program_id(0)
+    s = pl.program_id(1)                  # panel step; == steps: back-sub
+    t = pl.program_id(2)                  # column tile
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    cols_bs = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+
+    @pl.when((s == 0) & (t == 0))
+    def _init():
+        y_scr[...] = b_ref[0].astype(jnp.float32)
+        dmax_scr[0] = 0.0
+        cp = pltpu.make_async_copy(a_hbm.at[i, :, pl.ds(0, bs)],
+                                   slab_scr, sem)
+        cp.start()
+        cp.wait()
+        pan_scr[0] = slab_scr[...]
+
+    @pl.when((s < steps) & (t == s))
+    def _panel():
+        o = s * bs
+        pan = _pan_read(pan_scr, s % 2)
+        pan, v, taus = jax.lax.fori_loop(
+            0, bs,
+            functools.partial(_qr_panel_reflect_step, o=o, m=m, rows=rows,
+                              tiny=tiny),
+            (pan, jnp.zeros((m, bs), jnp.float32),
+             jnp.zeros((bs,), jnp.float32)))
+        vt_v = jnp.dot(v.T, v, preferred_element_type=jnp.float32)
+        tt = jax.lax.fori_loop(
+            0, bs,
+            functools.partial(_wy_t_step, vt_v=vt_v, taus=taus,
+                              cols_bs=cols_bs),
+            jnp.zeros((bs, bs), jnp.float32))
+        # block-apply Q_p^T to the right-hand sides
+        y = y_scr[...]
+        wy = jnp.dot(v.T, y, preferred_element_type=jnp.float32)
+        y_scr[...] = y - jnp.dot(
+            v, jnp.dot(tt.T, wy, preferred_element_type=jnp.float32),
+            preferred_element_type=jnp.float32)
+        v_scr[...] = v
+        t_scr[...] = tt
+        # global |diag R| max for the back-substitution threshold
+        blk = jax.lax.dynamic_slice(pan, (o, 0), (bs, bs))
+        d = jnp.max(jnp.abs(jnp.where(
+            cols_bs[:, None] == cols_bs[None, :], blk, 0.0)))
+        dmax_scr[0] = jnp.maximum(dmax_scr[0], d)
+        slab_scr[...] = pan
+        cp = pltpu.make_async_copy(slab_scr,
+                                   r_hbm.at[i, :, pl.ds(o, bs)], sem)
+        cp.start()
+        cp.wait()
+
+    @pl.when((s < steps) & (t > s))
+    def _trailing():
+        @pl.when(s == 0)
+        def _from_a():
+            cp = pltpu.make_async_copy(a_hbm.at[i, :, pl.ds(t * bs, bs)],
+                                       slab_scr, sem)
+            cp.start()
+            cp.wait()
+
+        @pl.when(s > 0)
+        def _from_r():
+            cp = pltpu.make_async_copy(r_hbm.at[i, :, pl.ds(t * bs, bs)],
+                                       slab_scr, sem)
+            cp.start()
+            cp.wait()
+
+        v = v_scr[...]
+        tt = t_scr[...]
+        slab = slab_scr[...]
+        w = jnp.dot(v.T, slab, preferred_element_type=jnp.float32)
+        slab = slab - jnp.dot(
+            v, jnp.dot(tt.T, w, preferred_element_type=jnp.float32),
+            preferred_element_type=jnp.float32)
+        slab_scr[...] = slab
+        cp = pltpu.make_async_copy(slab_scr,
+                                   r_hbm.at[i, :, pl.ds(t * bs, bs)], sem)
+        cp.start()
+        cp.wait()
+
+        @pl.when(t == s + 1)              # double-buffered panel carry
+        def _stash():
+            _pan_write(pan_scr, (s + 1) % 2, slab)
+
+    @pl.when(s == steps)
+    def _backsub():
+        rt = steps - 1 - t                # reverse slab order
+        o = rt * bs
+        cp = pltpu.make_async_copy(r_hbm.at[i, :, pl.ds(o, bs)],
+                                   slab_scr, sem)
+        cp.start()
+        cp.wait()
+        slab = slab_scr[...]
+        z = y_scr[...]
+        thresh = jnp.maximum(1e-6 * dmax_scr[0], tiny)
+        rb = jax.lax.dynamic_slice(slab, (o, 0), (bs, bs))
+        zt = jax.lax.dynamic_slice(z, (o, 0), (bs, k))
+        xt = back_substitute_r(rb, zt, n=bs, tiny=tiny, thresh=thresh)
+        z = jax.lax.dynamic_update_slice(z, xt, (o, 0))
+        above = jnp.where(rows[:, None] < o, slab, 0.0)
+        z = z - jnp.dot(above, xt, preferred_element_type=jnp.float32)
+        y_scr[...] = z
+
+        @pl.when(t == steps - 1)
+        def _finish():
+            x_ref[0] = z[:n].astype(x_ref.dtype)
+
+
+def qr_solve_tiled(a: jax.Array, b: jax.Array, *, bs: int | None = None,
+                   tiny: float = DEFAULT_TINY,
+                   interpret: bool | None = None) -> jax.Array:
+    """True sub-matrix tiled fused least squares — the HBM-scale path.
+
+    Same contract as :func:`qr_solve_pallas` (a: (B,M,N), M >= N,
+    b: (B,M,K) -> x: (B,N,K)) but the matrix stays HBM-resident: per
+    grid cell one (M, bs) column slab plus the compact-WY (V, T) of the
+    current panel live in VMEM — ``qr_tiled_vmem_floats`` = O(M*bs).
+    Registered as the ``tiled`` variant of the ``qr_solve`` spec; the
+    dispatcher picks it for N >= 512.
+    """
+    bsz, m, n = a.shape
+    b2, m2, k = b.shape
+    assert m == m2 and bsz == b2 and m >= n, (a.shape, b.shape)
+    if bs is None:
+        bs = tiled_block_size(n)
+    assert n % bs == 0 and n >= 2 * bs, (n, bs)
+    assert qr_tiled_vmem_floats(m, n, bs, k) * 4 <= \
+        TILED_VMEM_BUDGET_BYTES, (m, n, bs, k)
+    if interpret is None:
+        interpret = interpret_default()
+    steps = n // bs
+    x, _ = pl.pallas_call(
+        functools.partial(_qr_solve_tiled_kernel, m=m, n=n, k=k, bs=bs,
+                          steps=steps, tiny=tiny),
+        grid=(bsz, steps + 1, steps),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, m, k), lambda i, s, t: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, k), lambda i, s, t: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n, k), b.dtype),
+            jax.ShapeDtypeStruct((bsz, m, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((m, bs), jnp.float32),
+            pltpu.VMEM((2, m, bs), jnp.float32),
+            pltpu.VMEM((m, bs), jnp.float32),
+            pltpu.VMEM((bs, bs), jnp.float32),
+            pltpu.VMEM((m, k), jnp.float32),
+            pltpu.SMEM((1,), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+    return x
 
 
 def qr_solve_unfused(a: jax.Array, b: jax.Array, *,

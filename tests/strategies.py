@@ -1,0 +1,134 @@
+"""Shared property-test harness: the hypothesis-optional pattern plus
+well-conditioned matrix generators, extracted from the copies that lived
+in test_streams / test_masking / test_variants.
+
+Two layers:
+
+* **fuzzed** — decorator implementing the repo's hypothesis-optional
+  contract: when hypothesis is installed the test is fuzzed over the
+  declared strategy space (CI asserts these ``*_fuzzed`` variants
+  collect); without it the test still collects but is skipped, and the
+  deterministic parametrized grid next to it carries the coverage.
+  Strategies are declared with the lazy spec constructors below
+  (``integers``/``floats``/``sampled``) so importing this module never
+  requires hypothesis.
+
+      @fuzzed(max_examples=30, n=integers(2, 12))
+      def test_foo_fuzzed(n):
+          _check_foo(n)
+
+* **case generators** — deterministic, seed-keyed problem builders for
+  the solver pipelines (fuzz the scalars, build the arrays
+  reproducibly): ``spd_system`` (well-conditioned SPD + rhs),
+  ``tall_system`` (full-rank least-squares), ``channel_planes``
+  (split re/im complex MIMO channel).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as _st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    given = settings = _st = None
+
+__all__ = [
+    "HAVE_HYPOTHESIS", "fuzzed", "integers", "floats", "sampled",
+    "spd_system", "tall_system", "channel_planes",
+]
+
+
+# ---------------- lazy strategy specs ----------------
+# Plain descriptors resolved to hypothesis strategies only inside
+# ``fuzzed`` (and only when hypothesis is importable).
+
+def integers(lo: int, hi: int):
+    return ("integers", lo, hi)
+
+
+def floats(lo: float, hi: float):
+    return ("floats", lo, hi)
+
+
+def sampled(*choices):
+    return ("sampled", choices)
+
+
+def _resolve(spec):
+    kind = spec[0]
+    if kind == "integers":
+        return _st.integers(min_value=spec[1], max_value=spec[2])
+    if kind == "floats":
+        return _st.floats(min_value=spec[1], max_value=spec[2])
+    if kind == "sampled":
+        return _st.sampled_from(list(spec[1]))
+    raise ValueError(f"unknown strategy spec: {spec!r}")
+
+
+def fuzzed(max_examples: int = 50, **strategy_specs):
+    """Hypothesis-optional fuzzing decorator (see module docstring).
+
+    With hypothesis: ``@settings(max_examples=..., deadline=None)`` +
+    ``@given`` over the resolved strategies.  Without: the test is
+    collected but skipped — tier-1 gating falls to the deterministic
+    grid variant that every fuzzed property pairs with.
+    """
+    def deco(fn):
+        if not HAVE_HYPOTHESIS:
+            return pytest.mark.skip(
+                reason="hypothesis not installed; deterministic grid "
+                       "variant carries the coverage")(fn)
+        resolved = {k: _resolve(v) for k, v in strategy_specs.items()}
+        return settings(max_examples=max_examples,
+                        deadline=None)(given(**resolved)(fn))
+    return deco
+
+
+# ---------------- deterministic case generators ----------------
+
+def spd_system(seed: int, bsz: int, n: int, k: int = 2,
+               rank: int | None = None):
+    """Well-conditioned SPD system (a, b): a from the repo-wide
+    ``sample_spd`` recipe (X X^T + n*I — the same matrices registry
+    cases and benchmarks exercise) plus a Gaussian rhs.  ``rank`` builds
+    a deliberately rank-deficient a = X_r X_r^T instead (no regularizing
+    ridge) for pivot-guard tests."""
+    from repro.kernels.common import sample_spd
+    rng = np.random.default_rng(seed)
+    if rank is None:
+        a = sample_spd(rng, bsz, n)
+    else:
+        x = rng.standard_normal((bsz, n, rank)).astype(np.float32)
+        a = x @ x.swapaxes(-1, -2)
+    b = rng.standard_normal((bsz, n, k)).astype(np.float32)
+    return a, b
+
+
+def tall_system(seed: int, bsz: int, m: int, n: int, k: int = 2,
+                deficient_col: int | None = None):
+    """Full-rank tall least-squares case (a (B,M,N), b (B,M,K)), M >= N.
+    i.i.d. Gaussian tall matrices are well-conditioned with overwhelming
+    probability.  ``deficient_col`` zeroes one column (a numerically
+    dependent direction) for rank-deficiency tests."""
+    assert m >= n, (m, n)
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((bsz, m, n)).astype(np.float32)
+    if deficient_col is not None:
+        a[:, :, deficient_col] = 0.0
+    b = rng.standard_normal((bsz, m, k)).astype(np.float32)
+    return a, b
+
+
+def channel_planes(seed: int, bsz: int, m: int, n: int, k: int = 2):
+    """Split re/im complex MIMO channel case (hr, hi, yr, yi) for the
+    split-complex MMSE path; Gaussian planes keep H^H H + sigma^2 I
+    well-conditioned for any sigma2 > 0."""
+    assert m >= n, (m, n)
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: rng.standard_normal(s).astype(np.float32)
+    return (mk(bsz, m, n), mk(bsz, m, n),
+            mk(bsz, m, k), mk(bsz, m, k))

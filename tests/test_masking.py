@@ -1,22 +1,19 @@
 """Implicit vector masking (paper F4): mask generators agree with the
 stream-descriptor semantics, and the utilization model matches brute force.
 
-hypothesis is optional: the properties always run over a deterministic
-parametrized grid; an installed hypothesis adds fuzzed variants."""
+hypothesis is optional (see tests/strategies.py): the properties always
+run over a deterministic parametrized grid; the ``@fuzzed`` variants
+widen the space when hypothesis is installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:
-    HAVE_HYPOTHESIS = False
-
 from repro.core.masking import (lane_mask, masked_fill, tail_mask, tri_mask,
                                 vector_utilization)
 from repro.core.streams import inductive
+
+from strategies import fuzzed, integers, sampled
 
 
 def test_lane_mask_basic():
@@ -100,15 +97,11 @@ def test_masking_beats_padding_scalarization(n, w):
     _check_masking_beats_padding_scalarization(n, w)
 
 
-if HAVE_HYPOTHESIS:
-    @given(n=st.integers(min_value=1, max_value=32),
-           w=st.sampled_from([2, 4, 8, 16]))
-    @settings(max_examples=60, deadline=None)
-    def test_utilization_matches_bruteforce_fuzzed(n, w):
-        _check_utilization_matches_bruteforce(n, w)
+@fuzzed(max_examples=60, n=integers(1, 32), w=sampled(2, 4, 8, 16))
+def test_utilization_matches_bruteforce_fuzzed(n, w):
+    _check_utilization_matches_bruteforce(n, w)
 
-    @given(n=st.integers(min_value=1, max_value=16),
-           w=st.sampled_from([4, 8]))
-    @settings(max_examples=40, deadline=None)
-    def test_masking_beats_padding_scalarization_fuzzed(n, w):
-        _check_masking_beats_padding_scalarization(n, w)
+
+@fuzzed(max_examples=40, n=integers(1, 16), w=sampled(4, 8))
+def test_masking_beats_padding_scalarization_fuzzed(n, w):
+    _check_masking_beats_padding_scalarization(n, w)

@@ -1,24 +1,19 @@
 """Stream-descriptor IR: paper-claim checks (Figs. 10/11/21/22) and
 property tests on the executable semantics.
 
-hypothesis is optional: when present, the properties are fuzzed over the
-full strategy space; without it the same properties run over a
-deterministic parametrized grid, so the tier-1 suite collects and passes
-either way."""
+hypothesis is optional (see tests/strategies.py): each property runs
+over a deterministic parametrized grid, and the ``@fuzzed`` variants
+widen the space when hypothesis is installed."""
 from fractions import Fraction
 
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:
-    HAVE_HYPOTHESIS = False
-
 from repro.core.streams import (StreamDescriptor, StreamDim,
                                 average_stream_length, command_count,
                                 commands_per_iteration, inductive, rect)
+
+from strategies import fuzzed, integers, sampled
 
 
 # ---------------- constructors / classification ----------------
@@ -187,30 +182,23 @@ def test_addresses_unique_for_unit_stride_triangle(n):
     _check_addresses_unique_for_unit_stride_triangle(n)
 
 
-if HAVE_HYPOTHESIS:
-    dim_st = st.integers(min_value=1, max_value=12)
+@fuzzed(max_examples=50, nj=integers(1, 12), ni=integers(1, 12))
+def test_rect_length_product_fuzzed(nj, ni):
+    _check_rect_length_product(nj, ni)
 
-    @given(nj=dim_st, ni=dim_st)
-    @settings(max_examples=50, deadline=None)
-    def test_rect_length_product_fuzzed(nj, ni):
-        _check_rect_length_product(nj, ni)
 
-    @given(n=st.integers(min_value=1, max_value=16),
-           stretch=st.integers(min_value=-3, max_value=3),
-           base=st.integers(min_value=0, max_value=16))
-    @settings(max_examples=80, deadline=None)
-    def test_inductive_length_matches_sum_fuzzed(n, stretch, base):
-        _check_inductive_length_matches_sum(n, stretch, base)
+@fuzzed(max_examples=80, n=integers(1, 16), stretch=integers(-3, 3),
+        base=integers(0, 16))
+def test_inductive_length_matches_sum_fuzzed(n, stretch, base):
+    _check_inductive_length_matches_sum(n, stretch, base)
 
-    @given(n=st.integers(min_value=1, max_value=10),
-           stretch=st.integers(min_value=-2, max_value=2),
-           base=st.integers(min_value=1, max_value=10),
-           cap=st.sampled_from(["R", "RR", "RI"]))
-    @settings(max_examples=80, deadline=None)
-    def test_decomposition_preserves_coverage_fuzzed(n, stretch, base, cap):
-        _check_decomposition_preserves_coverage(n, stretch, base, cap)
 
-    @given(n=st.integers(min_value=2, max_value=12))
-    @settings(max_examples=30, deadline=None)
-    def test_addresses_unique_for_unit_stride_triangle_fuzzed(n):
-        _check_addresses_unique_for_unit_stride_triangle(n)
+@fuzzed(max_examples=80, n=integers(1, 10), stretch=integers(-2, 2),
+        base=integers(1, 10), cap=sampled("R", "RR", "RI"))
+def test_decomposition_preserves_coverage_fuzzed(n, stretch, base, cap):
+    _check_decomposition_preserves_coverage(n, stretch, base, cap)
+
+
+@fuzzed(max_examples=30, n=integers(2, 12))
+def test_addresses_unique_for_unit_stride_triangle_fuzzed(n):
+    _check_addresses_unique_for_unit_stride_triangle(n)

@@ -10,12 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:
-    HAVE_HYPOTHESIS = False
-
 from repro import kernels as K
 from repro.kernels import ref
 from repro.kernels.common import sample_spd
@@ -27,6 +21,7 @@ from repro.roofline.hlo_costs import analyze_hlo
 from repro.serve import ManualClock, PipelineEngine, SolveJob, SolverMux
 
 from conftest import assert_close
+from strategies import channel_planes, floats, fuzzed, integers, spd_system
 
 RNG = np.random.default_rng(777)
 
@@ -37,16 +32,12 @@ RNG = np.random.default_rng(777)
 # deterministic grid always runs; hypothesis widens the shape/sigma space.
 
 def _check_split_matches_complex_oracle(n, m_extra, k, sigma2, seed):
-    rng = np.random.default_rng(seed)
-    m = n + m_extra
-    hr, hi = [jnp.asarray(rng.standard_normal((2, m, n))
-                          .astype(np.float32)) for _ in range(2)]
-    yr, yi = [jnp.asarray(rng.standard_normal((2, m, k))
-                          .astype(np.float32)) for _ in range(2)]
+    hr, hi, yr, yi = [jnp.asarray(p) for p in channel_planes(
+        seed, 2, n + m_extra, n, k=k)]
     got = mmse_equalize_split_pallas(hr, hi, yr, yi, sigma2=sigma2)
     want = ref.mmse_equalize_split(hr, hi, yr, yi, sigma2=sigma2)
     assert_close(got, want, rtol=1e-3,
-                 name=f"split-mmse n={n} m={m} k={k} s={sigma2}")
+                 name=f"split-mmse n={n} m={n + m_extra} k={k} s={sigma2}")
 
 
 @pytest.mark.parametrize("n,m_extra,k", [(2, 0, 1), (8, 4, 2), (12, 4, 1),
@@ -56,16 +47,12 @@ def test_split_mmse_matches_complex_oracle(n, m_extra, k, sigma2):
     _check_split_matches_complex_oracle(n, m_extra, k, sigma2, seed=n + k)
 
 
-if HAVE_HYPOTHESIS:
-    @given(n=st.integers(min_value=2, max_value=10),
-           m_extra=st.integers(min_value=0, max_value=6),
-           k=st.integers(min_value=1, max_value=3),
-           sigma2=st.floats(min_value=1e-3, max_value=2.0),
-           seed=st.integers(min_value=0, max_value=2 ** 16))
-    @settings(max_examples=10, deadline=None)
-    def test_split_mmse_matches_complex_oracle_fuzzed(n, m_extra, k,
-                                                      sigma2, seed):
-        _check_split_matches_complex_oracle(n, m_extra, k, sigma2, seed)
+@fuzzed(max_examples=10, n=integers(2, 10), m_extra=integers(0, 6),
+        k=integers(1, 3), sigma2=floats(1e-3, 2.0),
+        seed=integers(0, 2 ** 16))
+def test_split_mmse_matches_complex_oracle_fuzzed(n, m_extra, k,
+                                                  sigma2, seed):
+    _check_split_matches_complex_oracle(n, m_extra, k, sigma2, seed)
 
 
 def test_split_mmse_equals_expansion_path():
@@ -124,9 +111,7 @@ def test_split_mmse_halves_model_flops():
 # ---------------- blocked Cholesky: equality sweeps ----------------
 
 def _check_blocked_chol_equals_unblocked(n, bs, rhs, seed):
-    rng = np.random.default_rng(seed)
-    a = jnp.asarray(sample_spd(rng, 2, n))
-    b = jnp.asarray(rng.standard_normal((2, n, rhs)).astype(np.float32))
+    a, b = [jnp.asarray(p) for p in spd_system(seed, 2, n, k=rhs)]
     blocked = cholesky_solve_blocked(a, b, bs=bs)
     unblocked = cholesky_solve_pallas(a, b)
     assert_close(blocked, unblocked, rtol=1e-4,

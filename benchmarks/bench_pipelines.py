@@ -26,7 +26,12 @@ the data persisted to ``BENCH_pipelines.json`` via ``run.py --json-out``.
 layer: a mixed cholesky/qr/mmse trace (including split-complex MMSE
 jobs) through the SolverMux, emitting per-pipeline p50/p99 latency,
 throughput, lane utilization, padded-lane waste, and per-variant
-dispatch counts — the SLO surface of the multiplexed lane pools.
+dispatch counts — the SLO surface of the multiplexed lane pools.  It
+ends with the OVERLOAD sweep: the deterministic 2x-capacity mixed-
+priority trace from ``repro.launch.serve_solvers.run_overload`` run
+with the overload policy on and off at the same lane-time budget,
+emitting hard-deadline SLO attainment plus the dropped / preempted /
+coalesced counters (rows required by ``check_bench_json``).
 """
 from __future__ import annotations
 
@@ -264,3 +269,20 @@ def run_slo() -> None:
              f"launches={st.launches}")
     emit("serve_slo/total", wall * 1e6,
          f"{snap.total_jobs} jobs,{snap.total_launches} launches")
+
+    # ---- overload sweep: 2x-capacity mixed-priority trace, policy
+    # on vs off at the SAME lane-time budget (virtual clock, exact) ----
+    from repro.launch.serve_solvers import run_overload
+
+    header("serve SLO overload: 2x offered load, mixed priorities, "
+           "policy on/off")
+    for summary in (run_overload(True), run_overload(False)):
+        tag = "policy" if summary["policy"] else "baseline"
+        emit(f"serve_slo/overload/hard_attainment_{tag}",
+             summary["attainment_hard"] * 100.0,
+             f"dropped={summary['dropped']},"
+             f"preempted={summary['preempted']},"
+             f"coalesced={summary['coalesced']},"
+             f"hard_dropped={summary['hard_dropped']},"
+             f"jobs={summary['jobs']},done={summary['done']},"
+             f"launches={summary['launches']}")

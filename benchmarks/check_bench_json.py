@@ -6,6 +6,12 @@ spec's ``base``) was actually exercised — a variant silently dropping
 out of the dispatch sweep (predicate typo, bench regression, registry
 rename) fails CI here instead of rotting unmeasured.
 
+Also requires the serve-SLO OVERLOAD rows (``run_slo``'s policy-on/off
+sweep): hard-deadline attainment with the overload policy must be
+present, strictly higher than the baseline run at the same budget, with
+zero hard-deadline drops and non-zero dropped/coalesced counters — so
+the baseline JSON is regenerated with ``--only variants,serve_slo``.
+
   PYTHONPATH=src python -m benchmarks.check_bench_json BENCH_pipelines.json
 """
 from __future__ import annotations
@@ -53,9 +59,35 @@ def check(path: str) -> None:
                and rec["n"] >= 512 and rec.get("dispatches", 0) > 0]
         assert big, (f"{name}: tiled variant not exercised at n >= 512 "
                      "(HBM-scale coverage lost)")
+
+    # Overload-policy SLO rows: the serve_slo sweep must have recorded
+    # the deterministic 2x-load scenario with the policy on AND off, the
+    # policy run must strictly beat the baseline on hard-deadline
+    # attainment, never drop a hard job, and actually shed + coalesce
+    # (a policy that no longer fires would zero these silently).
+    rows = {r["name"]: r for r in payload["rows"]}
+    on = rows.get("serve_slo/overload/hard_attainment_policy")
+    off = rows.get("serve_slo/overload/hard_attainment_baseline")
+    assert on and off, (
+        "serve_slo overload rows missing — regenerate with "
+        "`--only variants,serve_slo --json-out ...`")
+    fields = dict(kv.split("=") for kv in on["derived"].split(","))
+    assert {"dropped", "preempted", "coalesced",
+            "hard_dropped"} <= set(fields), (
+        f"overload row lacks policy counters: {on['derived']}")
+    assert fields["hard_dropped"] == "0", (
+        f"overload policy dropped hard-deadline jobs: {on['derived']}")
+    assert int(fields["dropped"]) > 0 and int(fields["coalesced"]) > 0, (
+        f"overload policy shed/coalesced nothing: {on['derived']}")
+    assert on["us_per_call"] > off["us_per_call"], (
+        f"hard-deadline SLO attainment with the policy "
+        f"({on['us_per_call']}%) must be strictly higher than the "
+        f"baseline ({off['us_per_call']}%)")
+
     print(f"{path}: ok — {len(payload['rows'])} rows, "
           f"{len(expected)} pipeline variants all exercised, "
-          f"tiled at n>=512 on {sorted(tiled_specs)}")
+          f"tiled at n>=512 on {sorted(tiled_specs)}, overload SLO "
+          f"{on['us_per_call']:.0f}% > {off['us_per_call']:.0f}% baseline")
 
 
 if __name__ == "__main__":

@@ -60,7 +60,9 @@ def json_payload(ran: list[str]) -> dict:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry-name substrings, e.g. "
+                         "'variants,serve_slo'")
     ap.add_argument("--json-out", default=None, metavar="FILE",
                     help="write rows + variant dispatch/flops records "
                          "as JSON (the BENCH_pipelines.json baseline)")
@@ -69,7 +71,8 @@ def main(argv=None) -> None:
     t0 = time.time()
     ran = []
     for name, fn in ENTRIES:
-        if args.only and args.only not in name:
+        if args.only and not any(tok and tok in name
+                                 for tok in args.only.split(",")):
             continue
         fn()
         ran.append(name)

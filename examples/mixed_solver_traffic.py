@@ -2,14 +2,18 @@
 
 Submits an interleaved stream of cholesky_solve, qr_solve, and
 mmse_equalize jobs at two problem sizes each — the PUSCH-style mix the
-ROADMAP's serve-multiplexing item describes — and shows the three layers
-of the mux at work: per-pipeline routing via the kernel registry, shape
-bucketing inside each lane pool, and deadline-aware continuous batching
+ROADMAP's serve-multiplexing item describes — and shows the layers of
+the mux at work: per-pipeline routing via the kernel registry, shape
+bucketing inside each lane pool, deadline-aware continuous batching
 (full lane groups dispatch on poll; stragglers flush when their deadline
-or age expires).  Results are checked against the registry oracles and
-the per-pipeline SLO metrics printed.
+or age expires), and — with ``--policy`` — the overload policy: jobs
+carry a priority class (every third job is a hard-deadline control-path
+solve), expired best-effort work is shed, and small jobs coalesce into
+larger buckets' free lanes.  Results are checked against the registry
+oracles and the per-pipeline SLO metrics printed, including the
+dropped/preempted/coalesced counters and per-priority p99.
 
-  PYTHONPATH=src python examples/mixed_solver_traffic.py
+  PYTHONPATH=src python examples/mixed_solver_traffic.py --policy
 """
 import argparse
 
@@ -17,19 +21,24 @@ import numpy as np
 
 from repro import kernels as K
 from repro.kernels.common import sample_spd
-from repro.serve import ManualClock, SolverMux
+from repro.serve import ManualClock, OverloadPolicy, SolverMux
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--jobs", type=int, default=30)
+    ap.add_argument("--policy", action="store_true",
+                    help="enable overload policy (shed / preempt / "
+                         "coalesce)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
     clock = ManualClock()
-    mux = SolverMux(lanes=args.lanes, max_wait=2e-3, clock=clock)
+    policy = OverloadPolicy() if args.policy else None
+    mux = SolverMux(lanes=args.lanes, max_wait=2e-3, clock=clock,
+                    policy=policy)
 
     def make(pipeline, n):
         m = n + 4
@@ -42,15 +51,18 @@ def main():
     pipelines = K.names(kind="pipeline")
     sizes = (8, 12)
     print(f"pipelines from registry: {pipelines}; sizes {sizes}; "
-          f"lanes={args.lanes}")
+          f"lanes={args.lanes}; policy={'on' if policy else 'off'}")
 
-    # interleaved arrivals, 1 job / 0.25 ms, deadline 1.5 ms after arrival
+    # interleaved arrivals, 1 job / 0.25 ms, deadline 1.5 ms after
+    # arrival; every third job is hard-deadline control-path traffic
     jobs = []
     for i in range(args.jobs):
         pipeline = pipelines[i % len(pipelines)]
         n = sizes[(i // len(pipelines)) % len(sizes)]
+        priority = "hard" if i % 3 == 0 else "best_effort"
         jobs.append(mux.submit(pipeline, *make(pipeline, n),
-                               deadline=clock() + 1.5e-3))
+                               deadline=clock() + 1.5e-3,
+                               priority=priority))
         done = mux.poll()              # full lane groups dispatch here
         if done:
             print(f"  t={clock() * 1e3:5.2f}ms poll dispatched "
@@ -59,24 +71,36 @@ def main():
     rest = mux.run()                   # drain stragglers (partial pads)
     print(f"  t={clock() * 1e3:5.2f}ms drain dispatched {len(rest)} jobs")
 
-    # every job got its own oracle-checked answer
-    for job in jobs:
+    # every SERVED job got its own oracle-checked answer (under the
+    # policy, expired best-effort jobs may have been shed instead)
+    served = [j for j in jobs if j.state == "done"]
+    dropped = [j for j in jobs if j.state == "dropped"]
+    for job in served:
         want = K.get(job.pipeline).run_oracle_lane(*job.args)
         err = (np.max(np.abs(job.out - want))
                / (np.max(np.abs(want)) + 1e-12))
         assert err < 1e-3, (job.pipeline, err)
-    print(f"all {len(jobs)} results match registry oracles\n")
+    assert all(j.priority != "hard" for j in dropped), \
+        "hard jobs must never be shed"
+    print(f"all {len(served)} served results match registry oracles "
+          f"({len(dropped)} best-effort shed)\n")
 
     snap = mux.metrics()
     print(f"{'pipeline':<16} {'jobs':>4} {'launches':>8} {'util':>6} "
-          f"{'waste':>6} {'p50_ms':>7} {'p99_ms':>7}")
+          f"{'waste':>6} {'p50_ms':>7} {'p99_ms':>7} {'drop':>5} "
+          f"{'coal':>5}")
     for name, st in sorted(snap.pipelines.items()):
         print(f"{name:<16} {st.jobs:>4} {st.launches:>8} "
               f"{st.lane_utilization:>6.2f} {st.padded_lane_waste:>6.2f} "
-              f"{st.latency.p50 * 1e3:>7.3f} {st.latency.p99 * 1e3:>7.3f}")
+              f"{st.latency.p50 * 1e3:>7.3f} {st.latency.p99 * 1e3:>7.3f} "
+              f"{st.dropped:>5} {st.lanes_coalesced:>5}")
     print(f"\n{snap.total_jobs} jobs in {snap.total_launches} grid "
           f"launches (batching: {snap.total_jobs / snap.total_launches:.1f} "
           f"jobs/launch)")
+    if policy is not None:
+        print(f"policy: dropped={snap.total_dropped} "
+              f"preempted={snap.total_preempted} "
+              f"coalesced={snap.total_coalesced}")
 
 
 if __name__ == "__main__":

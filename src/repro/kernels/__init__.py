@@ -41,7 +41,31 @@ from repro.kernels.ops import (  # noqa: F401
 
 __all__ = ["cholesky", "trisolve", "qr", "svd", "gemm", "fir", "fft",
            "flash_attention", "ssm_scan", "KernelSpec", "Variant",
-           "register", "get", "names", "specs"]
+           "Coalescer", "register", "get", "names", "specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Coalescer:
+    """Cross-shape ragged-batching adapter for a served pipeline.
+
+    Under overload the mux may pad a *small* job into a *larger*
+    compatible bucket's free lanes instead of benign filler — one fewer
+    grid launch at the price of padded-lane FLOPs.  The spec declares
+    how (the engine never guesses):
+
+    ``compatible(small_key, big_key)`` — both are SolveJob shape keys
+    (per-arg ``(shape, dtype_str)`` tuples); True iff a small job can be
+    embedded into a big-bucket lane AND the embedding is exact (the
+    small solution is recoverable from the big one).
+    ``embed(args, big_shapes)`` — per-lane small arrays -> per-lane
+    arrays at the big bucket's shapes.
+    ``extract(out_lane, small_shapes)`` — slice the small job's answer
+    back out of the big lane's result.
+    """
+
+    compatible: Callable
+    embed: Callable
+    extract: Callable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +96,18 @@ class Variant:
     sizes: tuple[int, ...] = ()
     flops: Callable | None = None
 
+    def model_flops(self, shapes) -> float:
+        """Closed-form model FLOPs for ONE lane at per-lane arg shapes —
+        the launch-cost model's workload term.  Falls back to the first
+        arg's element count when the variant declares no flops model, so
+        a cost is always orderable (bigger problems price higher)."""
+        shapes = tuple(tuple(s) for s in shapes)
+        if self.flops is not None:
+            return float(self.flops(shapes))
+        if shapes and shapes[0]:
+            return float(np.prod(shapes[0]))
+        return 1.0
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelSpec:
@@ -96,6 +132,10 @@ class KernelSpec:
     execute a spec (serving engines, benchmarks) go through
     :meth:`dispatch` / :meth:`dispatch_key` so large or split-complex
     jobs transparently land on the fast entry point.
+
+    ``coalesce`` is the spec's optional :class:`Coalescer` — the
+    declared cross-shape embedding that lets the serving mux ragged-
+    batch a small job into a larger bucket's free lanes under overload.
     """
 
     name: str
@@ -111,6 +151,7 @@ class KernelSpec:
     filler: Callable | None = None
     variants: tuple[Variant, ...] = ()
     flops: Callable | None = None
+    coalesce: Coalescer | None = None
 
     @property
     def base(self) -> Variant:
@@ -137,6 +178,13 @@ class KernelSpec:
             tuple(np.shape(a)[1:] for a in args),
             tuple(np.asarray(a).dtype if not hasattr(a, "dtype") else a.dtype
                   for a in args))
+
+    def model_flops(self, shapes, dtypes) -> float:
+        """Model FLOPs of one lane at per-lane shapes under whichever
+        variant :meth:`dispatch_key` would route it to — the registry
+        side of the serving cost model (calibration to wall-clock lives
+        in :class:`repro.serve.cost.CostModel`)."""
+        return self.dispatch_key(shapes, dtypes).model_flops(shapes)
 
     def run_oracle_lane(self, *args):
         """Oracle answer for ONE unbatched problem: adds the batch dim,
@@ -346,6 +394,56 @@ def _register_all() -> None:
         return (np.eye(m, n, dtype=dtypes[0]),
                 np.zeros(rhs_shape, dtype=dtypes[1]))
 
+    # Cross-shape coalescing for (matrix, rhs) solver pipelines: embed
+    # the small problem block-diagonally —
+    #     A_big = [[A, 0], [0, I]],  b_big = [[b, 0], [0, 0]]
+    # with A in the top-left (ms, ns) corner, an identity block on the
+    # trailing (N - ns) columns placed BELOW A's rows (rows ms..), and b
+    # zero-padded.  The blocks touch disjoint rows, so the factor /
+    # least-squares / MMSE solution of the big system is exactly
+    # block-separable: x_big[:ns, :ks] IS the small solution — bit-
+    # identical in float (the padded zeros contribute exact +0 terms),
+    # which tests/test_overload.py pins.  Requires M - ms >= N - ns so
+    # the identity block fits below A (square systems: always; tall
+    # m = n + c systems: same overhang c).
+    def _solver_coalesce_compatible(small_key, big_key):
+        if len(small_key) != 2 or len(big_key) != 2:
+            return False                     # e.g. 4-plane split-complex
+        (sa, sda), (sb, sdb) = small_key
+        (ba, bda), (bb, bdb) = big_key
+        if (sda, sdb) != (bda, bdb):
+            return False
+        if any(len(s) != 2 for s in (sa, sb, ba, bb)):
+            return False
+        (ms, ns), (M, N) = sa, ba
+        ks, K = sb[1], bb[1]
+        if sb[0] != ms or bb[0] != M:        # rhs rows ride the matrix
+            return False
+        return (ms <= M and ns <= N and ks <= K
+                and (ms, ns, ks) != (M, N, K)
+                and M - ms >= N - ns)
+
+    def _solver_coalesce_embed(args, big_shapes):
+        a, b = (np.asarray(x) for x in args)
+        (M, N), (_, K) = big_shapes
+        ms, ns = a.shape
+        big_a = np.zeros((M, N), dtype=a.dtype)
+        big_a[:ms, :ns] = a
+        t = N - ns
+        if t:
+            big_a[ms:ms + t, ns:] = np.eye(t, dtype=a.dtype)
+        big_b = np.zeros((M, K), dtype=b.dtype)
+        big_b[:ms, :b.shape[1]] = b
+        return big_a, big_b
+
+    def _solver_coalesce_extract(out_lane, small_shapes):
+        (_, ns), (_, ks) = small_shapes
+        return np.asarray(out_lane)[:ns, :ks]
+
+    _solver_coalescer = Coalescer(compatible=_solver_coalesce_compatible,
+                                  embed=_solver_coalesce_embed,
+                                  extract=_solver_coalesce_extract)
+
     def _blocked_when(shapes, dtypes):
         """Blocked factor applicability: two (matrix, rhs) args whose
         inner dimension reaches panel scale and tiles evenly (the
@@ -399,6 +497,7 @@ def _register_all() -> None:
         make_case=_chol_solve_case, stream=tri_ri,
         sizes=(8, 12, 16, 24, 32), kind="pipeline",
         filler=_identity_system_filler,
+        coalesce=_solver_coalescer,
         flops=_chol_solve_flops,
         variants=(
             Variant(name="tiled", fn=pp.cholesky_solve_tiled,
@@ -430,6 +529,7 @@ def _register_all() -> None:
         make_case=_qr_solve_case, stream=tri_ri,
         sizes=(8, 12, 16, 24, 32), kind="pipeline",
         filler=_identity_system_filler,
+        coalesce=_solver_coalescer,
         flops=_qr_solve_flops,
         variants=(
             Variant(name="tiled", fn=pp.qr_solve_tiled,
@@ -490,6 +590,7 @@ def _register_all() -> None:
         make_case=_mmse_case, stream=tri_ri,
         sizes=(8, 12, 16, 24, 32), kind="pipeline",
         filler=_identity_system_filler,
+        coalesce=_solver_coalescer,
         flops=_mmse_flops,
         variants=(
             Variant(name="split_complex",

@@ -7,11 +7,15 @@ lane-pool accounting + batch lifecycle):
            pad_group
   decode   DecodeEngine / Request       (LM continuous-batching-lite)
   solver   PipelineEngine / SolveJob    (single solver pipeline)
-  mux      SolverMux                    (mixed pipelines, shape-bucketed
+  mux      SolverMux / OverloadPolicy   (mixed pipelines, shape-bucketed
                                          continuous batching, deadline-
-                                         aware flush)
-  metrics  SLO dataclasses: p50/p99 latency, throughput, lane
-           utilization, padded-lane waste
+                                         aware flush; admission control,
+                                         preemption, coalescing)
+  cost     CostModel                    (launch pricing, calibratable
+                                         from BENCH_pipelines.json)
+  metrics  SLO dataclasses: p50/p99 latency (overall + per priority),
+           throughput, lane utilization, padded-lane waste, dropped/
+           preempted/coalesced counters
   engine   back-compat shim re-exporting the original names
 
 The kernel registry (``repro.kernels``) is the routing table: any
@@ -20,10 +24,13 @@ supplies benign padding lanes.
 """
 from repro.serve.core import (EngineCore, FifoEngineCore,  # noqa: F401
                               ManualClock, pad_group)
-from repro.serve.metrics import (LatencyStats, LaunchRecord,  # noqa: F401
-                                 MetricsSnapshot, PipelineStats, Recorder)
-from repro.serve.mux import SolverMux  # noqa: F401
-from repro.serve.solver import PipelineEngine, SolveJob  # noqa: F401
+from repro.serve.cost import CostModel  # noqa: F401
+from repro.serve.metrics import (DropRecord, LatencyStats,  # noqa: F401
+                                 LaunchRecord, MetricsSnapshot,
+                                 PipelineStats, Recorder)
+from repro.serve.mux import OverloadPolicy, SolverMux  # noqa: F401
+from repro.serve.solver import (PipelineEngine, SolveJob,  # noqa: F401
+                                VariantDispatcher)
 
 
 def __getattr__(name):
@@ -37,7 +44,8 @@ def __getattr__(name):
 __all__ = [
     "EngineCore", "FifoEngineCore", "ManualClock", "pad_group",
     "DecodeEngine", "Request",
-    "PipelineEngine", "SolveJob", "SolverMux",
-    "LatencyStats", "LaunchRecord", "MetricsSnapshot", "PipelineStats",
-    "Recorder",
+    "PipelineEngine", "SolveJob", "SolverMux", "VariantDispatcher",
+    "OverloadPolicy", "CostModel",
+    "DropRecord", "LatencyStats", "LaunchRecord", "MetricsSnapshot",
+    "PipelineStats", "Recorder",
 ]

@@ -66,15 +66,18 @@ class EngineCore:
     # ---------------- accounting ----------------
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
-                      padded: int, variant: str = "base") -> None:
+                      padded: int, variant: str = "base",
+                      coalesced: int = 0) -> None:
         self.recorder.record_launch(pipeline, shape, real, padded,
-                                    self.clock(), variant)
+                                    self.clock(), variant, coalesced)
 
     def record_job(self, pipeline: str, item) -> None:
-        """Stamp ``finished_at`` and log the job's latency sample."""
+        """Stamp ``finished_at`` and log the job's latency sample (keyed
+        by the item's priority class when it declares one)."""
         item.finished_at = self.clock()
         self.recorder.record_job(pipeline, item.submitted_at,
-                                 item.finished_at)
+                                 item.finished_at,
+                                 getattr(item, "priority", "best_effort"))
 
     def metrics(self) -> MetricsSnapshot:
         return self.recorder.snapshot()
@@ -102,6 +105,8 @@ class EngineCore:
                            variant.name if variant is not None else "base")
         for i, job in enumerate(jobs):
             job.out = res[i]
+            if hasattr(job, "state"):
+                job.state = "done"
             self.record_job(spec.name, job)
         return jobs
 

@@ -1,0 +1,89 @@
+"""Launch-cost model for overload-aware scheduling.
+
+The mux's overload policy (:class:`repro.serve.mux.OverloadPolicy`) must
+price a bucket flush *before* committing lanes: shed / preempt / coalesce
+decisions are only defensible if "how expensive is this launch?" has one
+answer everywhere.  That answer is::
+
+    launch_cost = launch_overhead + lanes * model_flops * sec_per_flop
+
+``model_flops`` comes from the registry (each :class:`repro.kernels.Variant`
+carries a closed-form per-lane FLOP model — the same numbers persisted to
+``BENCH_pipelines.json``); ``sec_per_flop`` is either a global default or
+a per-(pipeline, variant) rate calibrated from that benchmark baseline's
+measured wall-clock (:meth:`CostModel.from_bench_json`), so blocked /
+tiled launches price at their *measured* cost, not a guess.  The
+``launch_overhead`` term is what makes coalescing worthwhile: riding a
+free lane of an already-paid launch avoids a whole overhead quantum.
+
+All costs are seconds-shaped floats; with the default constants they are
+only *relatively* meaningful (bigger = more lane time), which is all the
+scheduler needs — budgets, preemption and coalescing decisions compare
+costs against each other, never against the wall clock.
+"""
+from __future__ import annotations
+
+import json
+
+# Uncalibrated defaults: ~0.5 GFLOP/s/lane of useful work and a 50 us
+# dispatch quantum per grid launch.  Arbitrary but *orderable* — they
+# preserve the two facts the policy relies on (cost grows with model
+# FLOPs; a launch has a fixed overhead worth amortizing).
+DEFAULT_SEC_PER_FLOP = 2e-9
+DEFAULT_LAUNCH_OVERHEAD = 5e-5
+
+
+class CostModel:
+    """Prices one grid launch of a dispatched variant.
+
+    ``table`` maps ``(pipeline, variant_name) -> sec_per_flop`` rates
+    calibrated from measured wall-clock; pairs absent from the table fall
+    back to the uniform ``sec_per_flop``.  ``launch_overhead`` is the
+    fixed per-launch cost (dispatch + compile-cache lookup + host sync)
+    that batching and coalescing amortize.
+    """
+
+    def __init__(self, sec_per_flop: float = DEFAULT_SEC_PER_FLOP,
+                 launch_overhead: float = DEFAULT_LAUNCH_OVERHEAD,
+                 table: dict | None = None):
+        self.sec_per_flop = float(sec_per_flop)
+        self.launch_overhead = float(launch_overhead)
+        self.table = dict(table or {})
+
+    @classmethod
+    def from_bench_json(cls, path: str = "BENCH_pipelines.json",
+                        **kwargs) -> "CostModel":
+        """Calibrate per-(pipeline, variant) sec/FLOP rates from the
+        persisted benchmark baseline: for every ``variants`` record with
+        a positive FLOP model, rate = wall_us * 1e-6 / model_flops; the
+        median across that variant's measured sizes becomes the table
+        entry.  Unmeasured pairs keep the uniform default rate."""
+        with open(path) as f:
+            payload = json.load(f)
+        rates: dict[tuple, list[float]] = {}
+        for rec in payload.get("variants", ()):
+            flops = rec.get("model_flops", 0.0)
+            wall = rec.get("wall_us", 0.0)
+            if flops > 0.0 and wall > 0.0:
+                key = (rec["pipeline"], rec["variant"])
+                rates.setdefault(key, []).append(wall * 1e-6 / flops)
+        table = {k: sorted(v)[len(v) // 2] for k, v in rates.items()}
+        return cls(table=table, **kwargs)
+
+    def rate(self, pipeline: str, variant_name: str) -> float:
+        return self.table.get((pipeline, variant_name), self.sec_per_flop)
+
+    def lane_cost(self, pipeline: str, variant, shapes) -> float:
+        """Seconds of lane time for ONE lane of ``variant`` at per-lane
+        ``shapes`` (``variant`` is a registry Variant)."""
+        return variant.model_flops(shapes) * self.rate(pipeline,
+                                                       variant.name)
+
+    def launch_cost(self, pipeline: str, variant, shapes,
+                    lanes: int = 1) -> float:
+        """Seconds for one grid launch ``lanes`` wide.  Padded filler
+        lanes execute the same program, so callers price the full pool
+        width — which is also why a coalesced rider lane is free at the
+        margin: its lane time was already paid for as filler."""
+        return self.launch_overhead + lanes * self.lane_cost(
+            pipeline, variant, shapes)

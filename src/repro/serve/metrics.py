@@ -1,20 +1,29 @@
 """SLO metrics for the serving stack — plain dataclasses, no deps.
 
 Every engine built on :class:`repro.serve.core.EngineCore` owns a
-:class:`Recorder` that accumulates two event kinds:
+:class:`Recorder` that accumulates four event kinds:
 
   * **launches** — one per dispatched grid (a ``pallas_call`` over a
     lane group): pipeline name, shape key, how many lanes carried real
-    jobs vs. benign padding.
+    jobs vs. benign padding, and how many of the real lanes were
+    cross-shape *coalesced* riders (small jobs embedded into a larger
+    bucket's free lanes by the overload policy).
   * **jobs** — one per completed job: submit and finish timestamps on
     the engine's clock (injectable — tests and trace replays use
-    :class:`repro.serve.core.ManualClock`).
+    :class:`repro.serve.core.ManualClock`) plus the job's priority
+    class, so latency distributions split per priority.
+  * **drops** — one per job shed by the overload policy (expired
+    best-effort work under admission control).
+  * **preemptions** — one per bucket flush abandoned so a pending
+    hard-deadline bucket could take its lane-time budget.
 
 ``Recorder.snapshot()`` folds the events into a :class:`MetricsSnapshot`
-with per-pipeline p50/p99/mean/max latency, throughput over the active
-window, lane utilization (real lanes / dispatched lanes) and padded-lane
-waste (the complement) — the SLO surface the ROADMAP asks
-``benchmarks/bench_pipelines.py`` to report for mixed traffic.
+with per-pipeline p50/p99/mean/max latency (overall AND per priority
+class), throughput over the active window, lane utilization (real lanes
+/ dispatched lanes), padded-lane waste (the complement), and the
+dropped / preempted / coalesced counters the overload policy exposes —
+the SLO surface the ROADMAP asks ``benchmarks/bench_pipelines.py`` to
+report for mixed traffic.
 """
 from __future__ import annotations
 
@@ -65,7 +74,9 @@ class LaunchRecord:
 
     ``variant`` is the registry variant the dispatcher routed the lane
     group to (``"base"`` for the spec's own entry point) — the per-launch
-    record behind :attr:`PipelineStats.dispatch_counts`."""
+    record behind :attr:`PipelineStats.dispatch_counts`.  ``coalesced``
+    counts how many of the ``real`` lanes carried cross-shape riders
+    (small jobs embedded at this launch's shape instead of filler)."""
 
     pipeline: str
     shape: tuple
@@ -73,6 +84,17 @@ class LaunchRecord:
     padded: int
     t: float
     variant: str = "base"
+    coalesced: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DropRecord:
+    """One job shed by the overload policy (terminal, never served)."""
+
+    pipeline: str
+    t: float
+    priority: str = "best_effort"
+    reason: str = "expired"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +113,16 @@ class PipelineStats:
     dispatch_counts: dict = dataclasses.field(default_factory=dict)
     """Launches per registry variant name — the observable proof that a
     bucket of large / split-complex jobs landed on the fast path."""
+    dropped: int = 0
+    """Jobs shed by the overload policy (expired best-effort)."""
+    preempted: int = 0
+    """Jobs whose bucket flush was abandoned for a hard-deadline bucket
+    (they stay queued and are re-admitted later — not terminal)."""
+    lanes_coalesced: int = 0
+    """Real lanes that carried cross-shape riders."""
+    latency_by_priority: dict = dataclasses.field(default_factory=dict)
+    """Priority class -> LatencyStats — the per-priority p50/p99 view the
+    overload policy is judged by."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,45 +133,66 @@ class MetricsSnapshot:
     launches: tuple[LaunchRecord, ...]
     total_jobs: int
     total_launches: int
+    total_dropped: int = 0
+    total_preempted: int = 0
+    total_coalesced: int = 0
 
     def __getitem__(self, pipeline: str) -> PipelineStats:
         return self.pipelines[pipeline]
 
 
 class Recorder:
-    """Accumulates launch/job events; ``snapshot()`` builds the stats."""
+    """Accumulates launch/job/drop/preempt events; ``snapshot()`` builds
+    the stats."""
 
     def __init__(self):
         self.reset()
 
     def reset(self) -> None:
         self._launches: list[LaunchRecord] = []
-        self._jobs: dict[str, list[tuple[float, float]]] = \
+        self._jobs: dict[str, list[tuple[float, float, str]]] = \
             collections.defaultdict(list)
+        self._drops: list[DropRecord] = []
+        self._preempts: dict[str, int] = collections.defaultdict(int)
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
-                      padded: int, t: float,
-                      variant: str = "base") -> None:
+                      padded: int, t: float, variant: str = "base",
+                      coalesced: int = 0) -> None:
         self._launches.append(
             LaunchRecord(pipeline, shape, int(real), int(padded), t,
-                         variant))
+                         variant, int(coalesced)))
 
     def record_job(self, pipeline: str, submitted_at: float,
-                   finished_at: float) -> None:
-        self._jobs[pipeline].append((submitted_at, finished_at))
+                   finished_at: float,
+                   priority: str = "best_effort") -> None:
+        self._jobs[pipeline].append((submitted_at, finished_at, priority))
+
+    def record_drop(self, pipeline: str, t: float,
+                    priority: str = "best_effort",
+                    reason: str = "expired") -> None:
+        self._drops.append(DropRecord(pipeline, t, priority, reason))
+
+    def record_preempt(self, pipeline: str, jobs: int, t: float) -> None:
+        self._preempts[pipeline] += int(jobs)
 
     def snapshot(self) -> MetricsSnapshot:
         per: dict[str, PipelineStats] = {}
-        names = set(self._jobs) | {l.pipeline for l in self._launches}
+        names = (set(self._jobs) | {l.pipeline for l in self._launches}
+                 | {d.pipeline for d in self._drops}
+                 | set(self._preempts))
         for name in sorted(names):
             jobs = self._jobs.get(name, [])
             launches = [l for l in self._launches if l.pipeline == name]
             real = sum(l.real for l in launches)
             padded = sum(l.padded for l in launches)
             dispatched = real + padded
-            lat = LatencyStats.of([f - s for s, f in jobs])
+            lat = LatencyStats.of([f - s for s, f, _ in jobs])
+            by_prio: dict[str, list[float]] = collections.defaultdict(list)
+            for s, f, prio in jobs:
+                by_prio[prio].append(f - s)
             if jobs:
-                window = max(f for _, f in jobs) - min(s for s, _ in jobs)
+                window = (max(f for _, f, _ in jobs)
+                          - min(s for s, _, _ in jobs))
                 thr = len(jobs) / window if window > 0 else 0.0
             else:
                 thr = 0.0
@@ -155,9 +208,17 @@ class Recorder:
                 latency=lat,
                 throughput=thr,
                 dispatch_counts=dict(collections.Counter(
-                    l.variant for l in launches)))
+                    l.variant for l in launches)),
+                dropped=sum(1 for d in self._drops if d.pipeline == name),
+                preempted=self._preempts.get(name, 0),
+                lanes_coalesced=sum(l.coalesced for l in launches),
+                latency_by_priority={p: LatencyStats.of(v)
+                                     for p, v in sorted(by_prio.items())})
         return MetricsSnapshot(
             pipelines=per,
             launches=tuple(self._launches),
             total_jobs=sum(len(v) for v in self._jobs.values()),
-            total_launches=len(self._launches))
+            total_launches=len(self._launches),
+            total_dropped=len(self._drops),
+            total_preempted=sum(self._preempts.values()),
+            total_coalesced=sum(l.coalesced for l in self._launches))

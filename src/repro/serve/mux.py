@@ -12,37 +12,95 @@ that interleaved stream and serves it with the paper's lane model:
     the blocked kernels, 4-plane MMSE buckets from the split-complex
     fast path, without the caller choosing anything.
   * **shape buckets** — within a pool, jobs are bucketed by their
-    per-arg (shape, dtype) key; only bucket-mates share a lane group.
+    per-arg (shape, dtype) key; only bucket-mates share a lane group
+    (unless the overload policy coalesces — below).
   * **continuous batching** — ``poll(now)`` dispatches full lane groups
     immediately and flushes *partial* buckets only when a deadline has
     expired, the bucket has waited ``max_wait``, or pool pressure
-    (queued jobs ≥ ``pressure``) demands draining; ``run()`` drains
-    everything.  Bucket flush order is deadline-aware: the bucket with
-    the oldest (earliest) deadline flushes first, ties broken by
-    submission order.
+    (queued jobs in THAT pool >= ``pressure``) demands draining;
+    ``run()`` drains everything.  Bucket flush order is deadline-aware:
+    the bucket with the oldest (earliest) deadline flushes first, ties
+    broken by submission order.
   * **padding** — a short lane group is topped up from the pipeline's
     ``KernelSpec.filler`` (a declared benign problem, e.g. identity
     system / zero rhs) so padded lanes stay finite and are discarded.
 
+Overload policy
+---------------
+
+With an :class:`OverloadPolicy` attached, ``poll`` becomes an
+overload-aware scheduler.  Every decision is justified by one price:
+``cost_model.launch_cost = overhead + lanes * model_flops * sec_per_flop``
+(:mod:`repro.serve.cost`; calibratable from the committed
+``BENCH_pipelines.json`` wall-clock baseline), evaluated through each
+bucket's :class:`~repro.serve.solver.VariantDispatcher` so a blocked or
+tiled bucket prices at its variant's real cost.  The rules:
+
+  * **shedding (admission control)** — a best-effort job whose deadline
+    has already expired can no longer meet it; it is dropped *before*
+    lanes are committed (terminal ``state="dropped"``, ``out`` stays
+    ``None``, a ``drop`` event and metrics counter).  Hard-priority jobs
+    are NEVER shed — at worst they finish late.
+  * **budgeted admission** — each poll admits launch candidates (full
+    chunks always; due partials) in earliest-deadline order while their
+    summed launch cost fits ``policy.budget`` (``None`` = unlimited).
+    A candidate that does not fit is deferred with a ``defer`` event
+    recording the price that did not fit.
+  * **priority preemption** — when a hard-deadline candidate does not
+    fit, already-admitted best-effort flushes are abandoned until it
+    does, cheapest-to-abandon first (lowest launch cost, partials over
+    full groups, fewest delayed jobs — all cost-model-ranked;
+    ``preempt`` events).  The abandoned bucket stays queued, ages
+    toward the starvation bypass, and is re-admitted later.
+  * **no starvation** — every defer/preemption ages the bucket; once a
+    due bucket has been pushed back ``policy.max_defer`` times it is
+    admitted ahead of everything on the next poll, so best-effort
+    traffic cannot be starved by a hard-deadline flood.
+  * **cross-shape coalescing** — an admitted partial launch's free
+    lanes would execute benign filler; under pool pressure (or when the
+    donor bucket is itself due) the policy instead embeds small jobs
+    from a compatible smaller bucket of the same pool into those lanes
+    (``KernelSpec.coalesce`` — block-diagonal embedding, bit-exact
+    extraction).  Applicability is checked at the padded shape:
+    ``Coalescer.compatible`` on the (donor, host) keys, the host
+    bucket's variant dispatched by its own predicate at exactly those
+    shapes, and every embedded lane verified to conform to the host
+    shapes/dtypes before launch.  The trade is scored by the cost
+    model: ride iff k * lane_cost(big) < launch_cost(small, k) — i.e.
+    the padded-lane waste is cheaper than the launch it avoids; a
+    rejection is logged as a ``coalesce_reject`` event with both
+    prices.  Absorbing a whole admitted smaller launch refunds its
+    budget, which flows back to deferred candidates (``readmit``).
+
+Every policy decision appends a JSON-able record to ``mux.events``
+(``flush`` / ``drop`` / ``preempt`` / ``defer`` / ``coalesce`` /
+``coalesce_reject`` / ``readmit``) — the audit trail golden-trace
+tests replay.
+
 API sketch::
 
-    mux = SolverMux(lanes=8)
-    job = mux.submit("mmse_equalize", h, y, deadline=now + 2e-3)
-    mux.submit("cholesky_solve", a, b)
-    done = mux.run()            # every job.out filled
-    snap = mux.metrics()        # per-pipeline p50/p99, utilization, ...
+    mux = SolverMux(lanes=8, policy=OverloadPolicy(budget=2e-4))
+    job = mux.submit("mmse_equalize", h, y, deadline=now + 2e-3,
+                     priority="hard")
+    mux.submit("cholesky_solve", a, b)          # best-effort
+    done = mux.poll(now)        # schedule one overload-aware round
+    snap = mux.metrics()        # per-pipeline p50/p99, drops, ...
 
 All timing runs on an injectable clock (``time.monotonic`` by default,
 :class:`repro.serve.core.ManualClock` for deterministic tests and trace
-replays).
+replays).  Without a policy the mux behaves exactly as before: nothing
+is ever dropped, preempted, or coalesced.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.core import EngineCore
+from repro.serve.core import EngineCore, pad_group
+from repro.serve.cost import CostModel
 from repro.serve.solver import (SolveJob, VariantDispatcher,
                                 resolve_pipeline_spec)
 
@@ -56,17 +114,68 @@ def _bucket_priority(jobs: list[SolveJob]) -> tuple:
     return (deadline, min(j.seq for j in jobs))
 
 
+def _round(x: float) -> float:
+    """Stable 6-significant-digit rounding for event-log costs, so the
+    golden trace files stay platform-independent."""
+    return float(f"{x:.6g}")
+
+
+def _shape_label(key: tuple) -> list:
+    """JSON-able form of a shape-bucket key for the event log."""
+    return [list(shape) for shape, _ in key]
+
+
+@dataclasses.dataclass
+class OverloadPolicy:
+    """Overload-management knobs for :class:`SolverMux` (see the module
+    docstring for the scheduling rules each one enables).
+
+    ``shed`` / ``preempt`` / ``coalesce`` gate the three mechanisms
+    independently (all on by default); ``budget`` is the per-poll
+    lane-time budget in cost-model seconds (``None`` = unlimited, so
+    only shedding and coalescing act); ``max_defer`` is the starvation
+    bound — a due bucket deferred or preempted this many times is
+    admitted ahead of everything on the next poll.  ``cost_model``
+    prices every decision; pass ``CostModel.from_bench_json()`` for
+    wall-clock-calibrated rates."""
+
+    shed: bool = True
+    preempt: bool = True
+    coalesce: bool = True
+    budget: float | None = None
+    max_defer: int = 3
+    cost_model: CostModel = dataclasses.field(default_factory=CostModel)
+
+
+@dataclasses.dataclass
+class _Candidate:
+    """One potential grid launch in a policy poll round."""
+
+    pool: "_LanePool"
+    key: tuple
+    jobs: list
+    partial: bool
+    hard: bool
+    aged: bool
+    price: float
+    deadline: float
+    seq: int
+    riders: tuple = ()
+
+
 class _LanePool:
     """Per-pipeline lane pool: variant dispatcher + shape buckets (lists
     of queued jobs keyed by per-arg shape/dtype).  Each bucket resolves
     through ``KernelSpec.dispatch`` — one compiled program per variant x
     shape bucket, so large / split-complex buckets transparently serve
-    from the fast variant."""
+    from the fast variant.  ``age`` counts consecutive defer/preempt
+    push-backs per bucket (the policy's starvation counter)."""
 
-    def __init__(self, spec, options: dict):
+    def __init__(self, spec, options: dict, cost_model=None):
         self.spec = spec
-        self.dispatcher = VariantDispatcher(spec, options)
+        self.dispatcher = VariantDispatcher(spec, options, cost_model)
         self.buckets: dict[tuple, list[SolveJob]] = {}
+        self.age: dict[tuple, int] = {}
 
     def enqueue(self, job: SolveJob) -> None:
         self.buckets.setdefault(job.shape_key(), []).append(job)
@@ -74,10 +183,22 @@ class _LanePool:
     def queued(self) -> int:
         return sum(len(jobs) for jobs in self.buckets.values())
 
+    def remove(self, key: tuple, jobs: list) -> None:
+        """Drop exactly ``jobs`` (by identity) from the ``key`` bucket,
+        deleting the bucket (and its age counter) when emptied."""
+        ids = {id(j) for j in jobs}
+        left = [j for j in self.buckets.get(key, ()) if id(j) not in ids]
+        if left:
+            self.buckets[key] = left
+        else:
+            self.buckets.pop(key, None)
+            self.age.pop(key, None)
+
 
 class SolverMux(EngineCore):
     """Mixed-job-type solver serving with shape-bucketed continuous
-    batching and a deadline-aware flush policy.
+    batching, a deadline-aware flush policy, and (optionally) the
+    overload policy described in the module docstring.
 
     Parameters:
       lanes     lane-group width per grid launch (per-pipeline pools all
@@ -85,9 +206,13 @@ class SolverMux(EngineCore):
       max_wait  seconds a partial bucket may age before ``poll`` flushes
                 it anyway (``None``: only deadlines/pressure flush
                 partials)
-      pressure  queued-job count in a pool above which ``poll`` flushes
-                partial buckets (oldest deadline first) until relieved;
-                defaults to ``4 * lanes``
+      pressure  per-pool queued-job count at or above which ``poll``
+                flushes that pool's partial buckets (oldest deadline
+                first) until relieved; defaults to ``4 * lanes``.  The
+                threshold is evaluated per pool — a backlog in one
+                pipeline never flushes another pipeline's partials.
+      policy    optional :class:`OverloadPolicy` enabling admission
+                control, preemption, and cross-shape coalescing
       options   per-pipeline kwargs bound into the served kernel, e.g.
                 ``{"mmse_equalize": {"sigma2": 0.05}}``
       clock     zero-arg time source (default ``time.monotonic``)
@@ -95,13 +220,16 @@ class SolverMux(EngineCore):
 
     def __init__(self, lanes: int = 8, *, max_wait: float | None = None,
                  pressure: int | None = None, clock=None,
+                 policy: OverloadPolicy | None = None,
                  options: dict[str, dict] | None = None):
         super().__init__(lanes, clock=clock)
         self.max_wait = max_wait
         self.pressure = 4 * lanes if pressure is None else pressure
+        self.policy = policy
         self._options = dict(options or {})
         self._pools: dict[str, _LanePool] = {}
         self._seq = 0
+        self.events: list[dict] = []
 
     # ---------------- submission / routing ----------------
 
@@ -109,29 +237,46 @@ class SolverMux(EngineCore):
         pool = self._pools.get(pipeline)
         if pool is None:
             spec = resolve_pipeline_spec(pipeline)
-            pool = _LanePool(spec, self._options.get(pipeline, {}))
+            cost_model = self.policy.cost_model if self.policy else None
+            pool = _LanePool(spec, self._options.get(pipeline, {}),
+                             cost_model)
             self._pools[pipeline] = pool
         return pool
 
-    def submit(self, pipeline: str, *args,
-               deadline: float | None = None) -> SolveJob:
+    def submit(self, pipeline: str, *args, deadline: float | None = None,
+               priority: str = "best_effort") -> SolveJob:
         """Route one job to its pipeline's lane pool and shape bucket.
 
         ``args`` are per-problem arrays WITHOUT the batch dimension;
-        ``deadline`` is an absolute clock time (None = best effort).
+        ``deadline`` is an absolute clock time (None = no deadline);
+        ``priority`` is ``"hard"`` (never shed, may preempt) or
+        ``"best_effort"`` (sheddable once expired, under a policy).
         Returns the queued :class:`SolveJob` (``out`` filled once a
-        dispatch containing it runs).
+        dispatch containing it runs; ``state`` becomes ``"done"`` or,
+        under a shedding policy, possibly ``"dropped"``).
         """
+        if priority not in SolveJob.PRIORITIES:
+            raise ValueError(f"priority must be one of "
+                             f"{SolveJob.PRIORITIES}, got {priority!r}")
         pool = self._pool(pipeline)
         self._seq += 1
         job = SolveJob(args=tuple(np.asarray(a) for a in args),
                        pipeline=pipeline, deadline=deadline,
-                       submitted_at=self.clock(), seq=self._seq)
+                       submitted_at=self.clock(), seq=self._seq,
+                       priority=priority)
         pool.enqueue(job)
         return job
 
     def pending(self) -> int:
         return sum(p.queued() for p in self._pools.values())
+
+    def drain_events(self) -> list[dict]:
+        """Return and clear the scheduling-decision event log."""
+        events, self.events = self.events, []
+        return events
+
+    def _event(self, kind: str, t: float, **fields) -> None:
+        self.events.append({"event": kind, "t": t, **fields})
 
     # ---------------- dispatch ----------------
 
@@ -142,25 +287,75 @@ class SolverMux(EngineCore):
         items.sort(key=lambda pk: _bucket_priority(pk[0].buckets[pk[1]]))
         return items
 
+    def _launch(self, pool: _LanePool, key: tuple, chunk: list,
+                riders: tuple = (), now: float | None = None) -> list:
+        """One grid launch: ``chunk`` jobs of the (pool, key) bucket plus
+        optional cross-shape ``riders`` embedded into otherwise-padded
+        lanes.  Records the launch + per-job latencies and logs a
+        ``flush`` event."""
+        spec = pool.spec
+        variant, fn = pool.dispatcher.resolve(key)
+        if riders:
+            big_shapes = tuple(shape for shape, _ in key)
+            embedded = [spec.coalesce.embed(j.args, big_shapes)
+                        for j in riders]
+            for lane in embedded:
+                for arr, (shape, dt) in zip(lane, key):
+                    arr = np.asarray(arr)
+                    if arr.shape != tuple(shape) or str(arr.dtype) != dt:
+                        raise ValueError(
+                            f"{spec.name!r} coalesce.embed produced a "
+                            f"{arr.shape}/{arr.dtype} lane; the host "
+                            f"bucket expects {tuple(shape)}/{dt}")
+            stacked = [np.stack([np.asarray(j.args[i]) for j in chunk]
+                                + [np.asarray(e[i]) for e in embedded])
+                       for i in range(len(key))]
+            padded, pad = pad_group(spec, stacked, self.lanes,
+                                    variant=variant)
+            res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
+            self.record_launch(spec.name, key, len(chunk) + len(riders),
+                               pad, variant.name, coalesced=len(riders))
+            done = []
+            for i, job in enumerate(chunk):
+                job.out = res[i]
+                job.state = "done"
+                self.record_job(spec.name, job)
+                done.append(job)
+            for r, job in enumerate(riders):
+                small_shapes = tuple(np.shape(a) for a in job.args)
+                job.out = spec.coalesce.extract(res[len(chunk) + r],
+                                                small_shapes)
+                job.state = "done"
+                self.record_job(spec.name, job)
+                done.append(job)
+        else:
+            done = self.dispatch_group(spec, fn, key, list(chunk),
+                                       variant=variant)
+        self._event("flush", t=self.clock() if now is None else now,
+                    pipeline=spec.name, variant=variant.name,
+                    shape=_shape_label(key),
+                    jobs=[j.seq for j in chunk],
+                    coalesced=[j.seq for j in riders])
+        return done
+
     def _flush_bucket(self, pool: _LanePool, key: tuple, *,
-                      full_only: bool) -> list[SolveJob]:
+                      full_only: bool,
+                      now: float | None = None) -> list[SolveJob]:
         """Dispatch a bucket in lane-group chunks.  ``full_only`` leaves
         the trailing partial chunk queued (continuous-batching path)."""
         jobs = pool.buckets[key]
-        variant, fn = pool.dispatcher.resolve(key)
         done: list[SolveJob] = []
         while len(jobs) >= self.lanes:
             chunk, jobs = jobs[:self.lanes], jobs[self.lanes:]
-            done.extend(self.dispatch_group(pool.spec, fn, key, chunk,
-                                            variant=variant))
+            done.extend(self._launch(pool, key, chunk, now=now))
         if jobs and not full_only:
-            chunk, jobs = jobs, []
-            done.extend(self.dispatch_group(pool.spec, fn, key, chunk,
-                                            variant=variant))
+            done.extend(self._launch(pool, key, jobs, now=now))
+            jobs = []
         if jobs:
             pool.buckets[key] = jobs
         else:
             del pool.buckets[key]
+            pool.age.pop(key, None)
         return done
 
     def _expired(self, jobs: list[SolveJob], now: float) -> bool:
@@ -173,22 +368,334 @@ class SolverMux(EngineCore):
     def poll(self, now: float | None = None) -> list[SolveJob]:
         """One continuous-batching round: full lane groups always
         dispatch; partial buckets dispatch only on expired deadline,
-        ``max_wait`` age, or pool pressure.  Oldest deadline flushes
-        first throughout."""
+        ``max_wait`` age, or per-pool pressure.  Oldest deadline flushes
+        first throughout.  With an :class:`OverloadPolicy` attached the
+        round additionally sheds expired best-effort jobs, admits
+        launches against the lane-time budget (preempting best-effort
+        partials for hard-deadline buckets), and coalesces small jobs
+        into larger buckets' free lanes — see the module docstring."""
         now = self.clock() if now is None else now
+        if self.policy is not None:
+            return self._poll_policy(now)
         done: list[SolveJob] = []
         for pool, key in self._sorted_buckets():
-            done.extend(self._flush_bucket(pool, key, full_only=True))
+            done.extend(self._flush_bucket(pool, key, full_only=True,
+                                           now=now))
         for pool, key in self._sorted_buckets():
             jobs = pool.buckets[key]
             if self._expired(jobs, now) or pool.queued() >= self.pressure:
-                done.extend(self._flush_bucket(pool, key, full_only=False))
+                done.extend(self._flush_bucket(pool, key, full_only=False,
+                                               now=now))
         return done
 
     def run(self) -> list[SolveJob]:
         """Drain everything queued (deadline-priority bucket order) and
-        return the completed jobs."""
+        return the completed jobs.  Drain is unconditional: no budget,
+        no shedding — every still-queued job is served."""
         done: list[SolveJob] = []
         for pool, key in self._sorted_buckets():
             done.extend(self._flush_bucket(pool, key, full_only=False))
+        return done
+
+    # ---------------- overload policy ----------------
+
+    def _shed(self, now: float) -> None:
+        """Admission control: drop queued best-effort jobs whose deadline
+        has already expired (they can no longer meet it; serving them
+        would burn budget hard-deadline traffic needs).  Hard jobs are
+        never shed."""
+        for pool in self._pools.values():
+            for key in list(pool.buckets):
+                keep = []
+                for job in pool.buckets[key]:
+                    if (job.priority != "hard" and job.deadline is not None
+                            and job.deadline < now):
+                        job.state = "dropped"
+                        self.recorder.record_drop(pool.spec.name, now,
+                                                  job.priority, "expired")
+                        self._event("drop", t=now, pipeline=pool.spec.name,
+                                    seq=job.seq, deadline=job.deadline,
+                                    reason="expired")
+                    else:
+                        keep.append(job)
+                if keep:
+                    pool.buckets[key] = keep
+                else:
+                    del pool.buckets[key]
+                    pool.age.pop(key, None)
+
+    def _candidates(self, now: float) -> list[_Candidate]:
+        """Launch candidates this round: every full lane-group chunk,
+        plus each due partial chunk (expired deadline / max_wait age /
+        per-pool pressure / starvation-aged).  Priced at full pool width
+        — padded lanes execute too — and sorted aged-first, then by
+        (deadline, arrival)."""
+        pol = self.policy
+        cands: list[_Candidate] = []
+        for pool in self._pools.values():
+            under_pressure = pool.queued() >= self.pressure
+            for key, jobs in pool.buckets.items():
+                if not jobs:
+                    continue
+                price = pool.dispatcher.price(key, self.lanes)
+                aged = pool.age.get(key, 0) >= pol.max_defer
+                rest = jobs
+                while len(rest) >= self.lanes:
+                    chunk, rest = rest[:self.lanes], rest[self.lanes:]
+                    cands.append(self._mk_cand(pool, key, chunk, False,
+                                               aged, price))
+                if rest and (aged or under_pressure
+                             or self._expired(rest, now)):
+                    cands.append(self._mk_cand(pool, key, rest, True,
+                                               aged, price))
+        cands.sort(key=lambda c: (not c.aged, c.deadline, c.seq))
+        return cands
+
+    @staticmethod
+    def _mk_cand(pool, key, chunk, partial, aged, price) -> _Candidate:
+        deadline, seq = _bucket_priority(chunk)
+        return _Candidate(pool=pool, key=key, jobs=list(chunk),
+                          partial=partial,
+                          hard=any(j.priority == "hard" for j in chunk),
+                          aged=aged, price=price, deadline=deadline,
+                          seq=seq)
+
+    def _admit(self, cands: list[_Candidate],
+               now: float) -> list[_Candidate]:
+        """Budgeted admission with hard-deadline preemption.  Walks the
+        candidates in priority order; a hard candidate that does not fit
+        may abandon already-admitted best-effort launches (cheapest to
+        abandon first; partials preferred) to free budget.  Deferred and
+        preempted buckets
+        age toward the starvation bypass: aged candidates sort first
+        (budget priority), and ONE aged candidate per poll may borrow
+        past the budget (the voucher drives the remaining budget
+        negative, blocking this poll's later candidates; each poll
+        starts afresh from ``policy.budget``) — bounded, so a backlog
+        of aged buckets can never avalanche past admission control."""
+        pol = self.policy
+        budget = math.inf if pol.budget is None else pol.budget
+        admitted: list[_Candidate] = []
+        voucher = True
+        bumped: set[tuple] = set()
+
+        def bump(cand):
+            pool = cand.pool
+            if (id(pool), cand.key) in bumped:
+                return              # age once per bucket per poll
+            bumped.add((id(pool), cand.key))
+            pool.age[cand.key] = pool.age.get(cand.key, 0) + 1
+
+        for cand in cands:
+            if cand.price <= budget or (cand.aged and voucher):
+                if cand.price > budget:
+                    voucher = False
+                admitted.append(cand)
+                budget -= cand.price
+                continue
+            if cand.hard and pol.preempt:
+                victims = sorted(
+                    (a for a in admitted if not a.hard and not a.aged),
+                    key=lambda a: (a.price, not a.partial, len(a.jobs)))
+                plan, freed = [], 0.0
+                need = cand.price - budget
+                for v in victims:
+                    if freed >= need:
+                        break
+                    plan.append(v)
+                    freed += v.price
+                if plan and freed >= need:
+                    for v in plan:
+                        admitted.remove(v)
+                        bump(v)
+                        self.recorder.record_preempt(
+                            v.pool.spec.name, len(v.jobs), now)
+                        self._event(
+                            "preempt", t=now,
+                            pipeline=v.pool.spec.name,
+                            shape=_shape_label(v.key),
+                            jobs=[j.seq for j in v.jobs],
+                            cost=_round(v.price),
+                            for_pipeline=cand.pool.spec.name,
+                            for_cost=_round(cand.price))
+                    budget += freed - cand.price
+                    admitted.append(cand)
+                    continue
+            bump(cand)
+            self._event("defer", t=now, pipeline=cand.pool.spec.name,
+                        shape=_shape_label(cand.key),
+                        jobs=[j.seq for j in cand.jobs],
+                        price=_round(cand.price),
+                        budget=_round(budget))
+        return admitted
+
+    def _ride_score(self, cand: _Candidate, dkey: tuple, k: int,
+                    host_variant) -> tuple[float, float]:
+        """(ride, own) prices for embedding ``k`` jobs of donor bucket
+        ``dkey`` into host ``cand``: ride = the padded-lane work the
+        riders cost at the host shape; own = the launch they would need
+        on their own.  Riding wins iff ride < own."""
+        pool, spec = cand.pool, cand.pool.spec
+        big_shapes = tuple(shape for shape, _ in cand.key)
+        small_shapes = tuple(shape for shape, _ in dkey)
+        donor_variant, _ = pool.dispatcher.resolve(dkey)
+        cm = self.policy.cost_model
+        ride = k * cm.lane_cost(spec.name, host_variant, big_shapes)
+        own = cm.launch_cost(spec.name, donor_variant, small_shapes,
+                             lanes=k)
+        return ride, own
+
+    def _plan_riders(self, admitted: list[_Candidate],
+                     now: float) -> tuple[list[_Candidate], float]:
+        """Cross-shape coalescing: fill admitted partial launches' free
+        lanes with compatible smaller jobs from the same pool instead of
+        filler.  Two donor sources, in order: (1) a whole *admitted*
+        smaller partial launch that fits entirely — its own launch is
+        cancelled and its already-charged budget refunded (the saved
+        launch is the point); (2) queued jobs of due-or-pressured
+        smaller buckets that were not admitted this round.  A ride is
+        validated at the padded shape (``Coalescer.compatible`` on the
+        (donor, host) keys; the host bucket's variant was dispatched by
+        its applicability predicate at exactly those shapes, and
+        ``_launch`` verifies every embedded lane conforms to them) and
+        scored by the cost model: ride iff the padded-lane work is
+        cheaper than the launch it avoids.  Returns the admitted list
+        with absorbed launches removed, plus the refunded budget."""
+        pol = self.policy
+        taken = {id(j) for c in admitted for j in c.jobs}
+        absorbed: set[int] = set()
+        refund = 0.0
+        for cand in admitted:
+            if not cand.partial or id(cand) in absorbed:
+                continue
+            free = self.lanes - len(cand.jobs)
+            if free <= 0:
+                continue
+            pool, spec = cand.pool, cand.pool.spec
+            if spec.coalesce is None:
+                continue
+            variant, _ = pool.dispatcher.resolve(cand.key)
+            # (1) absorb whole admitted smaller partial launches
+            for donor in admitted:
+                if free <= 0:
+                    break
+                if (donor is cand or id(donor) in absorbed
+                        or not donor.partial or donor.riders
+                        or donor.pool is not pool
+                        or len(donor.jobs) > free
+                        or not spec.coalesce.compatible(donor.key,
+                                                        cand.key)):
+                    continue
+                k = len(donor.jobs)
+                ride, own = self._ride_score(cand, donor.key, k, variant)
+                if ride >= own:
+                    self._event("coalesce_reject", t=now,
+                                pipeline=spec.name,
+                                from_shape=_shape_label(donor.key),
+                                into_shape=_shape_label(cand.key),
+                                ride_cost=_round(ride),
+                                own_cost=_round(own))
+                    continue
+                cand.riders += tuple(donor.jobs)
+                free -= k
+                absorbed.add(id(donor))
+                refund += donor.price
+                self._event("coalesce", t=now, pipeline=spec.name,
+                            from_shape=_shape_label(donor.key),
+                            into_shape=_shape_label(cand.key),
+                            jobs=[j.seq for j in donor.jobs],
+                            ride_cost=_round(ride), own_cost=_round(own))
+            # (2) queued donors that were not admitted this round
+            under_pressure = pool.queued() >= self.pressure
+            for dkey, djobs in list(pool.buckets.items()):
+                if free <= 0:
+                    break
+                if dkey == cand.key or not djobs:
+                    continue
+                if not spec.coalesce.compatible(dkey, cand.key):
+                    continue
+                if not (under_pressure or self._expired(djobs, now)):
+                    continue        # no pressure, donor can keep waiting
+                avail = [j for j in djobs if id(j) not in taken]
+                k = min(free, len(avail))
+                if k <= 0:
+                    continue
+                ride, own = self._ride_score(cand, dkey, k, variant)
+                if ride >= own:
+                    self._event("coalesce_reject", t=now,
+                                pipeline=spec.name,
+                                from_shape=_shape_label(dkey),
+                                into_shape=_shape_label(cand.key),
+                                ride_cost=_round(ride),
+                                own_cost=_round(own))
+                    continue
+                riders = avail[:k]
+                cand.riders += tuple(riders)
+                free -= k
+                taken.update(id(j) for j in riders)
+                self._event("coalesce", t=now, pipeline=spec.name,
+                            from_shape=_shape_label(dkey),
+                            into_shape=_shape_label(cand.key),
+                            jobs=[j.seq for j in riders],
+                            ride_cost=_round(ride), own_cost=_round(own))
+        return [c for c in admitted if id(c) not in absorbed], refund
+
+    def _readmit(self, cands: list[_Candidate],
+                 admitted: list[_Candidate], refund: float,
+                 now: float) -> list[_Candidate]:
+        """Budget refunded by absorbed launches flows back to this
+        round's deferred candidates, in the original priority order —
+        without this, a poll that saved a launch by coalescing would
+        still under-admit by that launch's cost."""
+        have = {id(c) for c in admitted}
+        extra: list[_Candidate] = []
+        for cand in cands:
+            if id(cand) in have or not cand.jobs:
+                continue
+            taken = {id(j) for c in admitted + extra
+                     for j in (*c.jobs, *c.riders)}
+            if any(id(j) in taken for j in cand.jobs):
+                continue            # its jobs already ride elsewhere
+            if cand.price <= refund:
+                refund -= cand.price
+                extra.append(cand)
+                self._event("readmit", t=now,
+                            pipeline=cand.pool.spec.name,
+                            shape=_shape_label(cand.key),
+                            jobs=[j.seq for j in cand.jobs],
+                            price=_round(cand.price))
+        return extra
+
+    def _poll_policy(self, now: float) -> list[SolveJob]:
+        """One overload-aware scheduling round: shed -> build candidates
+        -> budgeted admission (with preemption) -> coalesce (refunding
+        absorbed launches' budget to deferred candidates) -> dispatch in
+        admission priority order."""
+        pol = self.policy
+        if pol.shed:
+            self._shed(now)
+        cands = self._candidates(now)
+        admitted = self._admit(cands, now)
+        if pol.coalesce:
+            admitted, refund = self._plan_riders(admitted, now)
+            if refund > 0.0:
+                admitted.extend(self._readmit(cands, admitted, refund,
+                                              now))
+        done: list[SolveJob] = []
+        order = {id(c): i for i, c in enumerate(cands)}
+        for cand in sorted(admitted, key=lambda c: order[id(c)]):
+            pool = cand.pool
+            # launch BEFORE dequeuing: a launch that raises (e.g. a
+            # nonconforming coalesce embedding) must leave its jobs
+            # queued, exactly like the legacy flush path
+            served = self._launch(pool, cand.key, cand.jobs,
+                                  riders=cand.riders, now=now)
+            pool.remove(cand.key, cand.jobs)
+            by_key: dict[tuple, list] = {}
+            for rider in cand.riders:
+                by_key.setdefault(rider.shape_key(), []).append(rider)
+            for dkey, riders in by_key.items():
+                pool.remove(dkey, riders)
+            pool.age.pop(cand.key, None)
+            done.extend(served)
         return done

@@ -25,11 +25,20 @@ class SolveJob:
     ``args`` are the per-problem arrays WITHOUT the batch dimension
     (e.g. cholesky_solve: ``(a (N,N), b (N,M))``); ``out`` is filled by
     the serving engine.  ``pipeline`` and ``deadline`` (absolute clock
-    seconds; ``None`` = best-effort) are used by :class:`SolverMux`;
+    seconds; ``None`` = no deadline) are used by :class:`SolverMux`;
     ``submitted_at``/``finished_at`` are stamped by the engine clock and
     feed the SLO metrics; ``seq`` is the mux's global arrival order (the
     FIFO tiebreak among equal-deadline buckets).
+
+    ``priority`` is the overload-policy traffic class: ``"hard"`` jobs
+    must never be shed and may preempt; ``"best_effort"`` jobs may be
+    dropped once their deadline has expired.  ``state`` is the lifecycle
+    marker — ``"queued"`` until a dispatch serves it (``"done"``, ``out``
+    filled) or the overload policy sheds it (``"dropped"``, terminal,
+    ``out`` stays ``None``).
     """
+
+    PRIORITIES = ("hard", "best_effort")
 
     args: tuple
     out: np.ndarray | None = None
@@ -38,6 +47,8 @@ class SolveJob:
     submitted_at: float | None = None
     finished_at: float | None = None
     seq: int = 0
+    priority: str = "best_effort"
+    state: str = "queued"
 
     def shape_key(self) -> tuple:
         """Shape bucket: per-arg (shape, dtype) — jobs sharing it can be
@@ -66,11 +77,18 @@ class VariantDispatcher:
     variant, with one compiled program per variant x shape bucket.
     ``options`` (e.g. ``sigma2``) are bound into every variant entry
     point alike.
+
+    ``cost_model`` (a :class:`repro.serve.cost.CostModel`, lazily
+    defaulted) makes the dispatcher the one place a bucket flush gets
+    priced: :meth:`price` resolves the bucket's variant and returns the
+    estimated launch cost, so admission / preemption / coalescing
+    decisions all price through the same dispatch the launch will use.
     """
 
-    def __init__(self, spec, options: dict | None = None):
+    def __init__(self, spec, options: dict | None = None, cost_model=None):
         self.spec = spec
         self.options = dict(options or {})
+        self.cost_model = cost_model
         self._fns: dict[str, object] = {}
 
     def resolve(self, key: tuple):
@@ -85,6 +103,18 @@ class VariantDispatcher:
             fn = jax.jit(functools.partial(variant.fn, **self.options))
             self._fns[variant.name] = fn
         return variant, fn
+
+    def price(self, key: tuple, lanes: int = 1) -> float:
+        """Estimated launch cost (cost-model seconds) of flushing one
+        ``lanes``-wide grid of this shape bucket through whichever
+        variant :meth:`resolve` dispatches it to."""
+        if self.cost_model is None:
+            from repro.serve.cost import CostModel
+            self.cost_model = CostModel()
+        variant, _ = self.resolve(key)
+        shapes = tuple(shape for shape, _ in key)
+        return self.cost_model.launch_cost(self.spec.name, variant,
+                                           shapes, lanes)
 
 
 class PipelineEngine(FifoEngineCore):

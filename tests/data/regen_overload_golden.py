@@ -1,0 +1,29 @@
+"""Regenerate ``overload_golden.json`` from ``overload_trace.json``.
+
+Run after any INTENTIONAL overload-policy change, then review the
+golden diff like any other code change:
+
+  PYTHONPATH=src python tests/data/regen_overload_golden.py
+
+The replay parameters here must stay in sync with
+``tests/test_overload.py::test_golden_trace_replay_event_sequence``.
+"""
+import json
+import pathlib
+
+from repro.launch.serve_solvers import load_trace, replay_trace
+from repro.serve import CostModel, OverloadPolicy
+
+DATA = pathlib.Path(__file__).parent
+
+def main():
+    trace = load_trace(DATA / "overload_trace.json")
+    mux = replay_trace(trace, lanes=2, policy=OverloadPolicy(
+        budget=6.5e-5, cost_model=CostModel()), pressure=4)
+    out = DATA / "overload_golden.json"
+    out.write_text(json.dumps(mux.events, indent=1) + "\n")
+    kinds = sorted({e["event"] for e in mux.events})
+    print(f"wrote {out}: {len(mux.events)} events, kinds={kinds}")
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,15 @@ Two layers:
   reproducibly): ``spd_system`` (well-conditioned SPD + rhs),
   ``tall_system`` (full-rank least-squares), ``channel_planes``
   (split re/im complex MIMO channel).
+
+* **scheduler traces** — the ``traces()`` lazy spec generates random
+  priority/deadline/shape job traces for the SolverMux overload-policy
+  invariants (tests/test_overload.py): each entry is
+  ``(pipeline, n, priority, deadline_ticks, gap_ticks)`` where
+  ``deadline_ticks == 0`` means no deadline and ``gap_ticks`` is the
+  virtual-clock gap before the next arrival.  Arrays are built
+  deterministically from the entry index, so a failing trace shrinks to
+  a reproducible scenario.
 """
 from __future__ import annotations
 
@@ -38,8 +47,12 @@ except ModuleNotFoundError:
 
 __all__ = [
     "HAVE_HYPOTHESIS", "fuzzed", "integers", "floats", "sampled",
+    "traces", "TRACE_PIPELINES", "TRACE_SIZES",
     "spd_system", "tall_system", "channel_planes",
 ]
+
+TRACE_PIPELINES = ("cholesky_solve", "qr_solve", "mmse_equalize")
+TRACE_SIZES = (8, 12)
 
 
 # ---------------- lazy strategy specs ----------------
@@ -58,6 +71,13 @@ def sampled(*choices):
     return ("sampled", choices)
 
 
+def traces(max_len: int = 16):
+    """Random scheduler traces: lists of
+    ``(pipeline, n, priority, deadline_ticks, gap_ticks)`` entries (see
+    module docstring)."""
+    return ("traces", max_len)
+
+
 def _resolve(spec):
     kind = spec[0]
     if kind == "integers":
@@ -66,6 +86,14 @@ def _resolve(spec):
         return _st.floats(min_value=spec[1], max_value=spec[2])
     if kind == "sampled":
         return _st.sampled_from(list(spec[1]))
+    if kind == "traces":
+        entry = _st.tuples(
+            _st.sampled_from(TRACE_PIPELINES),
+            _st.sampled_from(TRACE_SIZES),
+            _st.sampled_from(("hard", "best_effort")),
+            _st.integers(min_value=0, max_value=4),   # 0 = no deadline
+            _st.integers(min_value=0, max_value=2))   # arrival gap
+        return _st.lists(entry, min_size=1, max_size=spec[1])
     raise ValueError(f"unknown strategy spec: {spec!r}")
 
 

@@ -31,10 +31,15 @@ ends with the OVERLOAD sweep: the deterministic 2x-capacity mixed-
 priority trace from ``repro.launch.serve_solvers.run_overload`` run
 with the overload policy on and off at the same lane-time budget,
 emitting hard-deadline SLO attainment plus the dropped / preempted /
-coalesced counters (rows required by ``check_bench_json``).
+coalesced counters (rows required by ``check_bench_json``), and the
+DRIFT sweep: the same trace with the cost model's online calibration
+loop closed, persisting per-variant predicted/measured drift ratios and
+calibration-update counts (``serve_slo/drift/*`` rows, also required by
+``check_bench_json``).
 """
 from __future__ import annotations
 
+import math
 import time
 from functools import partial
 
@@ -256,17 +261,24 @@ def run_slo() -> None:
     for name, st in sorted(snap.pipelines.items()):
         counts = ";".join(f"{v}:{c}" for v, c in
                           sorted(st.dispatch_counts.items()))
-        emit(f"serve_slo/{name}/dispatch", float(st.launches), counts)
+        emit(f"serve_slo/{name}/dispatch", float(st.launches), counts,
+             unit="count")
         emit(f"serve_slo/{name}/latency_p50", st.latency.p50 * 1e6,
              f"p99={st.latency.p99 * 1e6:.0f}us,n={st.jobs}")
         emit(f"serve_slo/{name}/latency_p99", st.latency.p99 * 1e6,
              f"max={st.latency.max * 1e6:.0f}us")
-        emit(f"serve_slo/{name}/throughput", 1e6 / st.throughput,
-             f"{st.throughput:.0f} jobs/s")
+        # throughput may be NaN (zero-width window: one instantaneous
+        # batch) — never divide through it blindly
+        if math.isfinite(st.throughput) and st.throughput > 0:
+            emit(f"serve_slo/{name}/throughput", 1e6 / st.throughput,
+                 f"{st.throughput:.0f} jobs/s")
+        else:
+            emit(f"serve_slo/{name}/throughput", 0.0,
+                 "window zero-width; throughput unknown")
         emit(f"serve_slo/{name}/lane_util",
              st.lane_utilization * 100.0,
              f"waste={st.padded_lane_waste * 100:.0f}%,"
-             f"launches={st.launches}")
+             f"launches={st.launches}", unit="percent")
     emit("serve_slo/total", wall * 1e6,
          f"{snap.total_jobs} jobs,{snap.total_launches} launches")
 
@@ -285,4 +297,22 @@ def run_slo() -> None:
              f"coalesced={summary['coalesced']},"
              f"hard_dropped={summary['hard_dropped']},"
              f"jobs={summary['jobs']},done={summary['done']},"
-             f"launches={summary['launches']}")
+             f"launches={summary['launches']}",
+             unit="percent")
+
+    # ---- cost-model drift: the overload trace again with the online
+    # calibration loop CLOSED — every launch measured, sec/FLOP +
+    # overhead re-fit, per-variant predicted/measured drift persisted
+    # (rows required by check_bench_json) ----
+    header("serve SLO drift: overload trace with online calibration on")
+    adaptive = run_overload(True, adaptive=True)
+    for key, d in sorted(adaptive["drift"].items()):
+        emit(f"serve_slo/drift/{key}", d["ratio"],
+             f"updates={d['updates']},source={d['source']},"
+             f"alert={int(d['alert'])}",
+             unit="ratio")
+    ups = adaptive["calibration_updates"]
+    emit("serve_slo/drift/calibration_updates",
+         float(sum(ups.values())),
+         ";".join(f"{k}={v}" for k, v in sorted(ups.items())),
+         unit="count")

@@ -12,6 +12,11 @@ present, strictly higher than the baseline run at the same budget, with
 zero hard-deadline drops and non-zero dropped/coalesced counters — so
 the baseline JSON is regenerated with ``--only variants,serve_slo``.
 
+Every row must also declare a known ``unit`` (``us`` / ``percent`` /
+``ratio`` / ``count``; attainment rows must be ``percent``), and the
+``serve_slo/drift/*`` rows from the online-calibration sweep must be
+present with at least one pair actually observed (``updates > 0``).
+
   PYTHONPATH=src python -m benchmarks.check_bench_json BENCH_pipelines.json
 """
 from __future__ import annotations
@@ -27,6 +32,24 @@ def check(path: str) -> None:
         payload = json.load(f)
     assert payload.get("schema") == 1, f"unknown schema: {payload.get('schema')}"
     assert payload["rows"], "no benchmark rows recorded"
+
+    # Row units: every row must declare one, drawn from the known set,
+    # and the value's meaning must match — attainment rows are
+    # percentages, drift rows dimensionless ratios; neither is a
+    # microsecond no matter what the legacy field name says.
+    from benchmarks.common import UNITS
+    for row in payload["rows"]:
+        unit = row.get("unit")
+        assert unit in UNITS, (
+            f"row {row['name']!r} has unit {unit!r}; expected one of "
+            f"{UNITS} — regenerate the baseline")
+        if row["name"].startswith("serve_slo/overload/hard_attainment"):
+            assert unit == "percent", (
+                f"attainment row {row['name']!r} must carry "
+                f"unit='percent', got {unit!r}")
+            assert 0.0 <= row["us_per_call"] <= 100.0, (
+                f"attainment row {row['name']!r} out of percent range: "
+                f"{row['us_per_call']}")
 
     exercised = {(rec["pipeline"], rec["variant"])
                  for rec in payload["variants"]
@@ -84,10 +107,34 @@ def check(path: str) -> None:
         f"({on['us_per_call']}%) must be strictly higher than the "
         f"baseline ({off['us_per_call']}%)")
 
-    print(f"{path}: ok — {len(payload['rows'])} rows, "
+    # Cost-model drift rows: the calibration sweep must have observed at
+    # least one (pipeline, variant) pair — a drift row with updates=0
+    # (or no drift rows at all) means the predict->measure->re-fit loop
+    # silently stopped closing.
+    drift_rows = [r for r in payload["rows"]
+                  if r["name"].startswith("serve_slo/drift/")
+                  and r["unit"] == "ratio"]
+    assert drift_rows, (
+        "serve_slo drift rows missing — regenerate with "
+        "`--only variants,serve_slo --json-out ...`")
+    live = []
+    for r in drift_rows:
+        fields = dict(kv.split("=") for kv in r["derived"].split(","))
+        assert {"updates", "source"} <= set(fields), (
+            f"drift row lacks updates/source: {r['derived']}")
+        assert r["us_per_call"] > 0, (
+            f"drift row {r['name']!r} has non-positive ratio "
+            f"{r['us_per_call']}")
+        if int(fields["updates"]) > 0:
+            live.append(r)
+    assert live, ("every drift row has updates=0 — the calibration "
+                  "loop observed no launches")
+
+    print(f"{path}: ok — {len(payload['rows'])} rows (units checked), "
           f"{len(expected)} pipeline variants all exercised, "
           f"tiled at n>=512 on {sorted(tiled_specs)}, overload SLO "
-          f"{on['us_per_call']:.0f}% > {off['us_per_call']:.0f}% baseline")
+          f"{on['us_per_call']:.0f}% > {off['us_per_call']:.0f}% baseline, "
+          f"{len(live)} drift pairs observed")
 
 
 if __name__ == "__main__":

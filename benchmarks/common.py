@@ -1,13 +1,23 @@
 """Shared benchmark plumbing: wall-clock timing of jitted callables, the
-``name,us_per_call,derived`` CSV contract used by benchmarks.run, and the
-variant-dispatch record feeding ``BENCH_pipelines.json``."""
+``name,us_per_call,derived,unit`` CSV contract used by benchmarks.run,
+and the variant-dispatch record feeding ``BENCH_pipelines.json``.
+
+Every row carries an explicit ``unit``: ``"us"`` for wall-clock numbers
+(the default), ``"percent"`` for attainment-style rows, ``"ratio"`` for
+dimensionless rows like the cost-model drift (predicted/measured), and
+``"count"`` for event counters (launches, calibration updates).  The
+value still travels in the ``us_per_call`` field for schema continuity,
+but consumers must check ``unit`` before treating it as microseconds —
+``benchmarks.check_bench_json`` enforces this."""
 from __future__ import annotations
 
 import time
 
 import jax
 
-ROWS: list[tuple[str, float, str]] = []
+UNITS = ("us", "percent", "ratio", "count")
+
+ROWS: list[tuple[str, float, str, str]] = []
 VARIANTS: list[dict] = []
 
 
@@ -26,9 +36,12 @@ def timeit(fn, *args, reps: int = 20, warmup: int = 3) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
-    ROWS.append((name, us, derived))
-    print(f"{name},{us:.2f},{derived}", flush=True)
+def emit(name: str, us: float, derived: str = "", unit: str = "us") -> None:
+    if unit not in UNITS:
+        raise ValueError(f"unknown bench row unit {unit!r} "
+                         f"(expected one of {UNITS})")
+    ROWS.append((name, us, derived, unit))
+    print(f"{name},{us:.2f},{derived},{unit}", flush=True)
 
 
 def header(title: str) -> None:

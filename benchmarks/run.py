@@ -9,7 +9,8 @@
   serving      mixed-traffic SLO (mux)      bench_pipelines.run_slo
   variants     variant-dispatch sweep       bench_pipelines.run_variants
 
-Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters.
+Prints ``name,us_per_call,derived,unit`` CSV.  ``--only <prefix>``
+filters.
 ``--json-out FILE`` additionally persists the run as JSON — rows plus
 the per-kernel/per-variant dispatch counts, model FLOPs and wall-clock
 from the ``variants`` entry — the ``BENCH_pipelines.json`` perf baseline
@@ -51,8 +52,12 @@ def json_payload(ran: list[str]) -> dict:
     return {
         "schema": 1,
         "entries": ran,
-        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
-                 for n, us, d in common.ROWS],
+        # ratio rows (cost-model drift) live far below 1.0 in interpret
+        # mode — 2-decimal rounding would flatten them to 0.0
+        "rows": [{"name": n,
+                  "us_per_call": round(us, 6 if u == "ratio" else 2),
+                  "derived": d, "unit": u}
+                 for n, us, d, u in common.ROWS],
         "variants": common.VARIANTS,
         "dispatch_counts": counts,
     }
@@ -67,7 +72,7 @@ def main(argv=None) -> None:
                     help="write rows + variant dispatch/flops records "
                          "as JSON (the BENCH_pipelines.json baseline)")
     args = ap.parse_args(argv)
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,unit")
     t0 = time.time()
     ran = []
     for name, fn in ENTRIES:

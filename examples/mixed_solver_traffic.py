@@ -13,7 +13,11 @@ larger buckets' free lanes.  Results are checked against the registry
 oracles and the per-pipeline SLO metrics printed, including the
 dropped/preempted/coalesced counters and per-priority p99.
 
-  PYTHONPATH=src python examples/mixed_solver_traffic.py --policy
+With ``--adapt`` the cost model's online calibration loop runs too:
+every launch is measured, sec/FLOP and launch overhead re-fit, and the
+per-variant predicted/measured drift printed at the end.
+
+  PYTHONPATH=src python examples/mixed_solver_traffic.py --policy --adapt
 """
 import argparse
 
@@ -21,7 +25,7 @@ import numpy as np
 
 from repro import kernels as K
 from repro.kernels.common import sample_spd
-from repro.serve import ManualClock, OverloadPolicy, SolverMux
+from repro.serve import CostModel, ManualClock, OverloadPolicy, SolverMux
 
 
 def main():
@@ -31,14 +35,23 @@ def main():
     ap.add_argument("--policy", action="store_true",
                     help="enable overload policy (shed / preempt / "
                          "coalesce)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="close the cost-model calibration loop and "
+                         "print drift metrics")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
     clock = ManualClock()
-    policy = OverloadPolicy() if args.policy else None
+    policy, cost_model = None, None
+    if args.policy and args.adapt:
+        policy = OverloadPolicy(cost_model=CostModel(adaptive=True))
+    elif args.policy:
+        policy = OverloadPolicy()
+    elif args.adapt:
+        cost_model = CostModel(adaptive=True)
     mux = SolverMux(lanes=args.lanes, max_wait=2e-3, clock=clock,
-                    policy=policy)
+                    policy=policy, cost_model=cost_model)
 
     def make(pipeline, n):
         m = n + 4
@@ -101,6 +114,16 @@ def main():
         print(f"policy: dropped={snap.total_dropped} "
               f"preempted={snap.total_preempted} "
               f"coalesced={snap.total_coalesced}")
+    if snap.drift:
+        print("\ncost-model drift (predicted/measured, EWMA ratio):")
+        for key, st in sorted(snap.drift.items()):
+            print(f"  {key:<30} ratio {st.ratio:>9.4f} "
+                  f"updates {st.updates:>3} source {st.source}"
+                  f"{'  ALERT' if st.alert else ''}")
+        worst = snap.worst_drift
+        if worst is not None:
+            print(f"  worst offender: {worst.key} "
+                  f"(ratio {worst.ratio:.4f})")
 
 
 if __name__ == "__main__":

@@ -190,12 +190,18 @@ def overload_trace(ticks: int, lanes: int, seed: int = 0) -> list[dict]:
 
 
 def run_overload(policy: bool, *, ticks: int = 8, lanes: int = 4,
-                 seed: int = 0) -> dict:
+                 seed: int = 0, adaptive: bool = False) -> dict:
     """Run the synthetic overload trace with the SAME lane-time budget
     in both modes; ``policy=True`` additionally enables shedding,
     preemption, and coalescing.  Returns the summary the SLO benchmark
-    emits and the acceptance test asserts on."""
-    cm = CostModel()
+    emits and the acceptance test asserts on.
+
+    ``adaptive=True`` runs the cost model with online calibration ON
+    (real wall-clock measurements feed :meth:`CostModel.observe`) and
+    adds the drift-observability fields (``drift`` /
+    ``calibration_updates``) to the summary — the source of the
+    ``serve_slo/drift/*`` rows in the persisted bench baseline."""
+    cm = CostModel(adaptive=adaptive)
     spec = K.get("mmse_equalize")
     unit = cm.launch_cost("mmse_equalize", spec.base,
                           ((12, 8), (12, 2)), lanes)
@@ -219,7 +225,7 @@ def run_overload(policy: bool, *, ticks: int = 8, lanes: int = 4,
         clock.advance(OVERLOAD_TICK)
     mux.run()
     snap = mux.metrics()
-    return {
+    summary = {
         "policy": policy,
         "jobs": len(jobs),
         "done": sum(1 for j in jobs if j.state == "done"),
@@ -232,6 +238,13 @@ def run_overload(policy: bool, *, ticks: int = 8, lanes: int = 4,
         "coalesced": snap.total_coalesced,
         "launches": snap.total_launches,
     }
+    if adaptive:
+        summary["drift"] = {
+            key: {"ratio": st.ratio, "updates": st.updates,
+                  "source": st.source, "alert": st.alert}
+            for key, st in snap.drift.items() if st.updates > 0}
+        summary["calibration_updates"] = snap.calibration_updates
+    return summary
 
 
 def main(argv=None):
@@ -253,6 +266,11 @@ def main(argv=None):
     ap.add_argument("--budget-us", type=float, default=None,
                     help="per-poll lane-time budget in cost-model "
                          "microseconds (requires --policy)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="close the cost-model loop online: measure "
+                         "every launch, re-fit sec/FLOP + overhead, tune "
+                         "flush thresholds from observed traffic, and "
+                         "report drift (predicted/measured) per variant")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.budget_us is not None and not args.policy:
@@ -261,12 +279,18 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed)
     clock = ManualClock()
-    policy = None
-    if args.policy:
-        policy = OverloadPolicy(
-            budget=None if args.budget_us is None else args.budget_us * 1e-6)
+    policy, cost_model = None, None
+    budget = None if args.budget_us is None else args.budget_us * 1e-6
+    if args.policy and args.adapt:
+        policy = OverloadPolicy(budget=budget,
+                                cost_model=CostModel(adaptive=True))
+    elif args.policy:
+        policy = OverloadPolicy(budget=budget)
+    elif args.adapt:
+        cost_model = CostModel(adaptive=True)
     mux = SolverMux(lanes=args.lanes, max_wait=args.max_wait_ms * 1e-3,
-                    clock=clock, policy=policy)
+                    clock=clock, policy=policy, cost_model=cost_model,
+                    adapt=args.adapt or None)
 
     t0 = time.perf_counter()
     jobs, done, sample = [], [], None
@@ -322,6 +346,19 @@ def main(argv=None):
         print(f"overload policy: dropped={snap.total_dropped} "
               f"preempted={snap.total_preempted} "
               f"coalesced={snap.total_coalesced}")
+    if snap.drift:
+        print("cost-model drift (predicted/measured, EWMA ratio):")
+        for key, st in sorted(snap.drift.items()):
+            flag = "  ALERT" if st.alert else ""
+            print(f"  {key:<28} ratio {st.ratio:>8.3f} "
+                  f"updates {st.updates:>4} source {st.source}{flag}")
+        worst = snap.worst_drift
+        if worst is not None:
+            print(f"  worst offender: {worst.key} "
+                  f"(ratio {worst.ratio:.3f})")
+        ups = ",".join(f"{k}={v}" for k, v in
+                       sorted(snap.calibration_updates.items()))
+        print(f"  calibration updates: {ups}")
 
 
 if __name__ == "__main__":

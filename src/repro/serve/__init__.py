@@ -11,8 +11,15 @@ lane-pool accounting + batch lifecycle):
                                          continuous batching, deadline-
                                          aware flush; admission control,
                                          preemption, coalescing)
-  cost     CostModel                    (launch pricing, calibratable
-                                         from BENCH_pipelines.json)
+  cost     CostModel / DriftStat        (self-tuning launch pricing:
+                                         offline calibration from
+                                         BENCH_pipelines.json + online
+                                         re-fit from measured launches,
+                                         drift observability)
+  config   ServeConfig / global_config  (REPRO_SERVE_* env-tunable knobs
+                                         for calibration + thresholds)
+  tuning   BucketTuner                  (observed-traffic flush
+                                         thresholds: max_wait, pressure)
   metrics  SLO dataclasses: p50/p99 latency (overall + per priority),
            throughput, lane utilization, padded-lane waste, dropped/
            preempted/coalesced counters
@@ -22,15 +29,18 @@ The kernel registry (``repro.kernels``) is the routing table: any
 ``kind="pipeline"`` spec is servable, and its declared ``filler``
 supplies benign padding lanes.
 """
+from repro.serve.config import ServeConfig, global_config  # noqa: F401
 from repro.serve.core import (EngineCore, FifoEngineCore,  # noqa: F401
                               ManualClock, pad_group)
-from repro.serve.cost import CostModel  # noqa: F401
+from repro.serve.cost import (CostModel, DriftStat,  # noqa: F401
+                              RobustEstimator)
 from repro.serve.metrics import (DropRecord, LatencyStats,  # noqa: F401
                                  LaunchRecord, MetricsSnapshot,
                                  PipelineStats, Recorder)
 from repro.serve.mux import OverloadPolicy, SolverMux  # noqa: F401
 from repro.serve.solver import (PipelineEngine, SolveJob,  # noqa: F401
                                 VariantDispatcher)
+from repro.serve.tuning import BucketTuner  # noqa: F401
 
 
 def __getattr__(name):
@@ -45,7 +55,8 @@ __all__ = [
     "EngineCore", "FifoEngineCore", "ManualClock", "pad_group",
     "DecodeEngine", "Request",
     "PipelineEngine", "SolveJob", "SolverMux", "VariantDispatcher",
-    "OverloadPolicy", "CostModel",
+    "OverloadPolicy", "CostModel", "DriftStat", "RobustEstimator",
+    "ServeConfig", "global_config", "BucketTuner",
     "DropRecord", "LatencyStats", "LaunchRecord", "MetricsSnapshot",
     "PipelineStats", "Recorder",
 ]

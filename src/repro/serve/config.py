@@ -1,0 +1,127 @@
+"""Env-tunable serving configuration: one ``ServeConfig`` instance,
+every calibration/tuning knob behind an environment variable.
+
+The self-tuning cost model (:mod:`repro.serve.cost`) and the adaptive
+flush-threshold tuner (:mod:`repro.serve.tuning`) both read their knobs
+from the module-level :data:`global_config` — the alpa ``global_env.py``
+pattern — so a deployment can pin or free every part of the calibration
+loop without code edits::
+
+    REPRO_SERVE_CALIBRATE=1 python -m repro.launch.serve_solvers --policy
+
+Knob reference (name / env var / default / effect) — the same table is
+kept in ROADMAP.md's serving notes:
+
+========================  =================================  ========
+attribute                 env var                            default
+========================  =================================  ========
+calibrate                 REPRO_SERVE_CALIBRATE              0 (off)
+calibration_alpha         REPRO_SERVE_CALIBRATION_ALPHA      0.35
+calibration_window        REPRO_SERVE_CALIBRATION_WINDOW     5
+calibration_warmup        REPRO_SERVE_CALIBRATION_WARMUP     3
+rate_floor                REPRO_SERVE_RATE_FLOOR             1e-15
+overhead_floor            REPRO_SERVE_OVERHEAD_FLOOR         1e-9
+drift_alert_ratio         REPRO_SERVE_DRIFT_ALERT_RATIO      1.5
+bench_json                REPRO_SERVE_BENCH_JSON             BENCH_pipelines.json
+adapt_thresholds          REPRO_SERVE_ADAPT_THRESHOLDS       0 (off)
+interarrival_alpha        REPRO_SERVE_INTERARRIVAL_ALPHA     0.3
+wait_floor                REPRO_SERVE_WAIT_FLOOR             0.0
+wait_cap                  REPRO_SERVE_WAIT_CAP               5e-3
+pressure_gain             REPRO_SERVE_PRESSURE_GAIN          8.0
+pressure_cap_lanes        REPRO_SERVE_PRESSURE_CAP_LANES     8
+========================  =================================  ========
+
+* ``calibrate`` — master switch for ONLINE re-fitting: with it off, a
+  ``CostModel`` built without an explicit ``adaptive=True`` stays
+  frozen at its seeded/bench-calibrated rates (predictions are still
+  compared against measurements and drift is still tracked whenever a
+  model IS adaptive).  Off by default so replayable tests and committed
+  golden traces price deterministically.
+* ``calibration_alpha`` — EWMA weight of each new window-median; higher
+  adapts faster, lower smooths more.
+* ``calibration_window`` — samples per robust window; the estimator
+  updates on the MEDIAN of each full window, so up to
+  ``(window - 1) // 2`` outlier flushes per window cannot move it.
+* ``calibration_warmup`` — window-median updates required before an
+  online estimate replaces the seeded value (one weird first flush
+  cannot repoint admission control).
+* ``rate_floor`` / ``overhead_floor`` — positivity clamps (sec/FLOP,
+  seconds): no measurement stream, however adversarial, can drive an
+  estimate to zero or below.
+* ``drift_alert_ratio`` — |log ratio| threshold above which a
+  (pipeline, variant) pair is flagged ``alert`` in drift reports.
+* ``bench_json`` — default path ``CostModel.from_bench_json`` reads.
+* ``adapt_thresholds`` — master switch for the per-bucket flush tuner
+  (``max_wait`` from observed inter-arrival, pool pressure from
+  observed launch cost).  Off by default for the same determinism
+  reason as ``calibrate``.
+* ``interarrival_alpha`` — EWMA weight for per-bucket inter-arrival
+  estimates.
+* ``wait_floor`` / ``wait_cap`` — clamp (seconds) on the tuned
+  per-bucket ``max_wait``.
+* ``pressure_gain`` — tuned pressure aims to amortize the launch
+  overhead ``pressure_gain`` times over a drain's lane time.
+* ``pressure_cap_lanes`` — tuned pressure never exceeds this many
+  multiples of the pool width (and never drops below one pool width).
+"""
+from __future__ import annotations
+
+import os
+
+
+def _env_bool(name: str, default: bool) -> bool:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() in ("1", "true", "yes", "on")
+
+
+def _env_float(name: str, default: float) -> float:
+    raw = os.environ.get(name)
+    return default if raw is None else float(raw)
+
+
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name)
+    return default if raw is None else int(raw)
+
+
+class ServeConfig:
+    """All serving-stack tuning knobs (see the module docstring for the
+    per-knob reference).  Construction reads the environment once;
+    :meth:`reload` re-reads it (tests use this around ``monkeypatch``).
+    """
+
+    def __init__(self):
+        self.reload()
+
+    def reload(self) -> "ServeConfig":
+        # ---- online cost-model calibration ----
+        self.calibrate = _env_bool("REPRO_SERVE_CALIBRATE", False)
+        self.calibration_alpha = _env_float(
+            "REPRO_SERVE_CALIBRATION_ALPHA", 0.35)
+        self.calibration_window = _env_int(
+            "REPRO_SERVE_CALIBRATION_WINDOW", 5)
+        self.calibration_warmup = _env_int(
+            "REPRO_SERVE_CALIBRATION_WARMUP", 3)
+        self.rate_floor = _env_float("REPRO_SERVE_RATE_FLOOR", 1e-15)
+        self.overhead_floor = _env_float(
+            "REPRO_SERVE_OVERHEAD_FLOOR", 1e-9)
+        self.drift_alert_ratio = _env_float(
+            "REPRO_SERVE_DRIFT_ALERT_RATIO", 1.5)
+        self.bench_json = os.environ.get(
+            "REPRO_SERVE_BENCH_JSON", "BENCH_pipelines.json")
+        # ---- adaptive flush thresholds ----
+        self.adapt_thresholds = _env_bool(
+            "REPRO_SERVE_ADAPT_THRESHOLDS", False)
+        self.interarrival_alpha = _env_float(
+            "REPRO_SERVE_INTERARRIVAL_ALPHA", 0.3)
+        self.wait_floor = _env_float("REPRO_SERVE_WAIT_FLOOR", 0.0)
+        self.wait_cap = _env_float("REPRO_SERVE_WAIT_CAP", 5e-3)
+        self.pressure_gain = _env_float("REPRO_SERVE_PRESSURE_GAIN", 8.0)
+        self.pressure_cap_lanes = _env_int(
+            "REPRO_SERVE_PRESSURE_CAP_LANES", 8)
+        return self
+
+
+global_config = ServeConfig()

@@ -19,6 +19,7 @@ a spec that wants to be served padded must declare its filler.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import jax.numpy as jnp
@@ -51,25 +52,35 @@ class EngineCore:
     tests/replays.  Engines call :meth:`record_launch` /
     :meth:`record_job` as batches complete and expose :meth:`metrics`.
 
+    ``wall`` is the *measurement* clock (``time.perf_counter`` by
+    default) used by :meth:`_timed_call` to stamp real launch wall-clock
+    onto every :class:`~repro.serve.metrics.LaunchRecord` — deliberately
+    separate from the scheduling ``clock`` so virtual-clock replays still
+    measure true execution cost.  Each measured launch is also fed to
+    :meth:`observe_launch`, the hook engines override to close the
+    cost-model calibration loop (the base hook is a no-op).
+
     Deliberately queue-free: single-FIFO engines (decode, one-pipeline
     solver) add the queue via :class:`FifoEngineCore`; the mux keeps its
     own per-pipeline shape buckets instead.
     """
 
-    def __init__(self, lanes: int, clock=None):
+    def __init__(self, lanes: int, clock=None, wall=None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
         self.lanes = int(lanes)
         self.clock = clock if clock is not None else time.monotonic
+        self.wall = wall if wall is not None else time.perf_counter
         self.recorder = Recorder()
 
     # ---------------- accounting ----------------
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, variant: str = "base",
-                      coalesced: int = 0) -> None:
-        self.recorder.record_launch(pipeline, shape, real, padded,
-                                    self.clock(), variant, coalesced)
+                      coalesced: int = 0, measured: float = None) -> None:
+        self.recorder.record_launch(
+            pipeline, shape, real, padded, self.clock(), variant,
+            coalesced, math.nan if measured is None else measured)
 
     def record_job(self, pipeline: str, item) -> None:
         """Stamp ``finished_at`` and log the job's latency sample (keyed
@@ -85,14 +96,33 @@ class EngineCore:
     def reset_metrics(self) -> None:
         self.recorder.reset()
 
+    def _timed_call(self, fn, padded: list) -> tuple[np.ndarray, float]:
+        """Execute one padded lane-group launch and measure its wall
+        clock on ``self.wall``.  The one seam every launch goes through:
+        deterministic tests replace it with a synthetic wall model to
+        drive the calibration loop without real-timer noise."""
+        t0 = self.wall()
+        res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
+        return res, self.wall() - t0
+
+    def observe_launch(self, spec, variant, key: tuple, lanes: int,
+                       measured: float) -> None:
+        """Per-launch feedback hook: called after every measured launch
+        with the dispatched variant, the bucket key, the full padded
+        lane width, and the measured wall-clock seconds.  The base
+        engine does nothing; cost-model-carrying engines override it to
+        feed :meth:`repro.serve.cost.CostModel.observe`."""
+
     # ---------------- batch lifecycle ----------------
 
     def dispatch_group(self, spec, fn, key: tuple, jobs: list,
                        variant=None) -> list:
         """The one lane-group batch lifecycle, shared by every solver
         engine: stack per-arg, pad to the pool from the (variant's or
-        spec's) filler, launch ``fn`` once, scatter per-lane results back
-        onto the jobs, and account the launch + per-job latencies.
+        spec's) filler, launch ``fn`` once (measured — the wall-clock is
+        stamped on the LaunchRecord and fed to :meth:`observe_launch`),
+        scatter per-lane results back onto the jobs, and account the
+        launch + per-job latencies.
 
         ``fn`` is the jit'd entry point the caller resolved through
         ``KernelSpec.dispatch_key`` for this shape bucket; ``variant``
@@ -100,9 +130,11 @@ class EngineCore:
         stacked = [np.stack([np.asarray(j.args[i]) for j in jobs])
                    for i in range(len(jobs[0].args))]
         padded, pad = pad_group(spec, stacked, self.lanes, variant=variant)
-        res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
+        res, measured = self._timed_call(fn, padded)
         self.record_launch(spec.name, key, len(jobs), pad,
-                           variant.name if variant is not None else "base")
+                           variant.name if variant is not None else "base",
+                           measured=measured)
+        self.observe_launch(spec, variant, key, len(jobs) + pad, measured)
         for i, job in enumerate(jobs):
             job.out = res[i]
             if hasattr(job, "state"):

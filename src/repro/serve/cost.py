@@ -1,4 +1,4 @@
-"""Launch-cost model for overload-aware scheduling.
+"""Self-tuning launch-cost model: predict -> measure -> re-fit.
 
 The mux's overload policy (:class:`repro.serve.mux.OverloadPolicy`) must
 price a bucket flush *before* committing lanes: shed / preempt / coalesce
@@ -8,67 +8,267 @@ answer everywhere.  That answer is::
     launch_cost = launch_overhead + lanes * model_flops * sec_per_flop
 
 ``model_flops`` comes from the registry (each :class:`repro.kernels.Variant`
-carries a closed-form per-lane FLOP model — the same numbers persisted to
-``BENCH_pipelines.json``); ``sec_per_flop`` is either a global default or
-a per-(pipeline, variant) rate calibrated from that benchmark baseline's
-measured wall-clock (:meth:`CostModel.from_bench_json`), so blocked /
-tiled launches price at their *measured* cost, not a guess.  The
-``launch_overhead`` term is what makes coalescing worthwhile: riding a
-free lane of an already-paid launch avoids a whole overhead quantum.
+carries a closed-form per-lane FLOP model); ``sec_per_flop`` is a
+per-(pipeline, variant) rate and ``launch_overhead`` the fixed per-launch
+cost (dispatch + compile-cache lookup + host sync) that batching and
+coalescing amortize.  Both start as guesses or as an offline calibration
+(:meth:`CostModel.from_bench_json` — medians of the committed
+``BENCH_pipelines.json`` wall-clock) and, unlike the one-shot model this
+replaces, neither is trusted forever:
+
+**The online loop.**  Every serve-side flush measures its wall-clock
+(:meth:`repro.serve.core.EngineCore.dispatch_group` stamps it onto the
+:class:`~repro.serve.metrics.LaunchRecord`) and feeds it back through
+:meth:`CostModel.observe`.  Each observation
+
+1. records the **drift** of that (pipeline, variant) pair — the EWMA of
+   predicted/measured launch-cost ratios, exposed per pair (with its
+   calibration source: ``default`` / ``bench`` / ``online``) through
+   :meth:`drift` and folded into ``MetricsSnapshot`` so a mispriced
+   variant is visible in SLO reports *before* it costs attainment; and
+2. when the model is **adaptive** (``CostModel(adaptive=True)`` or
+   ``REPRO_SERVE_CALIBRATE=1`` — see :mod:`repro.serve.config`),
+   re-fits the pair's ``sec_per_flop`` and the shared
+   ``launch_overhead`` by coordinate descent on the residuals::
+
+       overhead_sample = measured - flops * rate[pair]     # rate held
+       rate_sample     = (measured - overhead) / flops     # oh held
+
+   Each sample stream runs through a :class:`RobustEstimator` — the
+   MEDIAN of every ``calibration_window`` samples is EWMA-blended
+   (``calibration_alpha``), and the estimate only *replaces* the seeded
+   value after ``calibration_warmup`` window-medians — so one outlier
+   flush (GC pause, first-touch page faults, a neighbor's compile)
+   cannot destabilize admission.  Samples are clamped to positivity
+   floors: no measurement stream can drive an estimate non-positive.
 
 All costs are seconds-shaped floats; with the default constants they are
 only *relatively* meaningful (bigger = more lane time), which is all the
 scheduler needs — budgets, preemption and coalescing decisions compare
-costs against each other, never against the wall clock.
+costs against each other, never against the wall clock.  Once the online
+loop has warmed up they converge toward real wall-clock seconds, which
+is what makes the drift ratio (predicted/measured, 1.0 = perfectly
+priced) a meaningful SLO-side observable.
+
+Every knob (alpha, window, warmup, floors, alert threshold, master
+switch) lives in :class:`repro.serve.config.ServeConfig` behind a
+``REPRO_SERVE_*`` env var — deployments pin or free calibration without
+code edits.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import logging
+import math
+
+from repro.serve.config import global_config
+
+log = logging.getLogger(__name__)
 
 # Uncalibrated defaults: ~0.5 GFLOP/s/lane of useful work and a 50 us
 # dispatch quantum per grid launch.  Arbitrary but *orderable* — they
 # preserve the two facts the policy relies on (cost grows with model
-# FLOPs; a launch has a fixed overhead worth amortizing).
+# FLOPs; a launch has a fixed overhead worth amortizing) until the
+# online loop replaces them with measured values.
 DEFAULT_SEC_PER_FLOP = 2e-9
 DEFAULT_LAUNCH_OVERHEAD = 5e-5
 
 
-class CostModel:
-    """Prices one grid launch of a dispatched variant.
+def _median(vals) -> float:
+    """True median: the average of the two middle elements for
+    even-length inputs (``sorted(v)[len(v) // 2]`` is the UPPER middle
+    element, which biased every calibrated rate upward)."""
+    s = sorted(vals)
+    n = len(s)
+    mid = n // 2
+    if n % 2:
+        return s[mid]
+    return 0.5 * (s[mid - 1] + s[mid])
 
-    ``table`` maps ``(pipeline, variant_name) -> sec_per_flop`` rates
-    calibrated from measured wall-clock; pairs absent from the table fall
-    back to the uniform ``sec_per_flop``.  ``launch_overhead`` is the
-    fixed per-launch cost (dispatch + compile-cache lookup + host sync)
-    that batching and coalescing amortize.
+
+class RobustEstimator:
+    """EWMA-of-window-medians with an update-count warmup.
+
+    ``value`` stays at the seeded ``initial`` until ``warmup`` full
+    windows have been folded; from then on it is the running EWMA of
+    window medians.  Because every applied value is a convex combination
+    of medians of observed (floored) samples, the warmed estimate always
+    lies within the observed sample envelope ``[min(sample),
+    max(sample)]`` and can never go non-positive — the property the
+    fuzzed calibration tests pin.
+    """
+
+    def __init__(self, initial: float, *, alpha: float, window: int,
+                 warmup: int, floor: float):
+        self.initial = float(initial)
+        self.alpha = float(alpha)
+        self.window = max(1, int(window))
+        self.warmup = max(1, int(warmup))
+        self.floor = float(floor)
+        self.updates = 0            # window-medians folded so far
+        self.samples = 0
+        self._est = math.nan        # EWMA of window medians
+        self._buf: list[float] = []
+
+    @property
+    def warmed(self) -> bool:
+        return self.updates >= self.warmup
+
+    @property
+    def value(self) -> float:
+        return self._est if self.warmed else self.initial
+
+    def observe(self, sample: float) -> bool:
+        """Fold one sample; returns True when a full window was folded
+        (i.e. the running estimate moved)."""
+        self.samples += 1
+        self._buf.append(max(self.floor, float(sample)))
+        if len(self._buf) < self.window:
+            return False
+        med = _median(self._buf)
+        self._buf.clear()
+        self.updates += 1
+        if self.updates == 1:
+            self._est = med         # jump to the first median: the
+        else:                       # seeded value never leaks into the
+            self._est += self.alpha * (med - self._est)   # envelope
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftStat:
+    """Predicted-vs-measured health of one (pipeline, variant) pair.
+
+    ``ratio`` is the EWMA of per-launch predicted/measured launch-cost
+    ratios (1.0 = perfectly priced, >1 overpriced, <1 underpriced;
+    NaN until the pair has been observed); ``last`` the most recent
+    ratio; ``updates`` how many flushes have been observed; ``source``
+    where the pair's current rate comes from (``"default"`` /
+    ``"bench"`` / ``"online"``); ``alert`` whether ``|log(ratio)|``
+    exceeds the configured ``drift_alert_ratio``."""
+
+    pipeline: str
+    variant: str
+    ratio: float
+    last: float
+    updates: int
+    source: str
+    alert: bool
+
+    @property
+    def key(self) -> str:
+        return f"{self.pipeline}/{self.variant}"
+
+
+class _PairDrift:
+    """Mutable per-pair drift accumulator behind :class:`DriftStat`."""
+
+    __slots__ = ("ratio", "last", "updates")
+
+    def __init__(self):
+        self.ratio = math.nan
+        self.last = math.nan
+        self.updates = 0
+
+    def observe(self, ratio: float, alpha: float) -> None:
+        self.last = ratio
+        self.updates += 1
+        if math.isnan(self.ratio):
+            self.ratio = ratio
+        else:
+            self.ratio += alpha * (ratio - self.ratio)
+
+
+class CostModel:
+    """Prices one grid launch of a dispatched variant — and, when
+    adaptive, re-fits itself from measured launch wall-clock.
+
+    ``table`` maps ``(pipeline, variant_name) -> sec_per_flop`` rates;
+    pairs absent from the table fall back to the uniform
+    ``sec_per_flop``.  ``launch_overhead`` is the fixed per-launch cost
+    that batching and coalescing amortize — the coalescing lever, and
+    the number the online loop most needs to measure (module docstring).
+
+    ``adaptive=None`` defers to ``config.calibrate``
+    (``REPRO_SERVE_CALIBRATE``); ``config`` defaults to the process-wide
+    :data:`repro.serve.config.global_config`.
     """
 
     def __init__(self, sec_per_flop: float = DEFAULT_SEC_PER_FLOP,
                  launch_overhead: float = DEFAULT_LAUNCH_OVERHEAD,
-                 table: dict | None = None):
+                 table: dict | None = None, *,
+                 adaptive: bool | None = None, config=None,
+                 calibrated: frozenset | None = None):
+        self.config = config if config is not None else global_config
         self.sec_per_flop = float(sec_per_flop)
         self.launch_overhead = float(launch_overhead)
         self.table = dict(table or {})
+        self.adaptive = (self.config.calibrate if adaptive is None
+                         else bool(adaptive))
+        #: pairs whose rate came from the offline bench calibration —
+        #: surfaced as ``source="bench"`` in the drift metrics so
+        #: "calibrated vs default" is visible per pair.
+        self.calibrated = frozenset(calibrated if calibrated is not None
+                                    else self.table)
+        self._drift: dict[tuple, _PairDrift] = {}
+        self._rate_est: dict[tuple, RobustEstimator] = {}
+        self._oh_est = self._estimator(self.launch_overhead,
+                                       self.config.overhead_floor)
+
+    def _estimator(self, initial: float, floor: float) -> RobustEstimator:
+        cfg = self.config
+        return RobustEstimator(initial, alpha=cfg.calibration_alpha,
+                               window=cfg.calibration_window,
+                               warmup=cfg.calibration_warmup, floor=floor)
+
+    # ---------------- offline calibration ----------------
 
     @classmethod
-    def from_bench_json(cls, path: str = "BENCH_pipelines.json",
+    def from_bench_json(cls, path: str | None = None,
                         **kwargs) -> "CostModel":
         """Calibrate per-(pipeline, variant) sec/FLOP rates from the
         persisted benchmark baseline: for every ``variants`` record with
         a positive FLOP model, rate = wall_us * 1e-6 / model_flops; the
-        median across that variant's measured sizes becomes the table
-        entry.  Unmeasured pairs keep the uniform default rate."""
-        with open(path) as f:
-            payload = json.load(f)
+        true median across that variant's measured sizes becomes the
+        table entry.  Unmeasured pairs keep the uniform default rate.
+
+        A missing, unreadable, or malformed baseline — and a baseline
+        with no usable rows — falls back to an UNCALIBRATED model with a
+        logged warning instead of raising deep inside mux construction;
+        the resulting all-``default`` sources show up in the drift
+        metrics."""
+        config = kwargs.get("config") or global_config
+        if path is None:
+            path = config.bench_json
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as e:
+            log.warning("cost model: cannot read bench baseline %s (%s); "
+                        "falling back to uncalibrated defaults", path, e)
+            return cls(**kwargs)
         rates: dict[tuple, list[float]] = {}
-        for rec in payload.get("variants", ()):
-            flops = rec.get("model_flops", 0.0)
-            wall = rec.get("wall_us", 0.0)
-            if flops > 0.0 and wall > 0.0:
-                key = (rec["pipeline"], rec["variant"])
-                rates.setdefault(key, []).append(wall * 1e-6 / flops)
-        table = {k: sorted(v)[len(v) // 2] for k, v in rates.items()}
+        try:
+            for rec in payload.get("variants", ()):
+                flops = rec.get("model_flops", 0.0)
+                wall = rec.get("wall_us", 0.0)
+                if flops > 0.0 and wall > 0.0:
+                    key = (rec["pipeline"], rec["variant"])
+                    rates.setdefault(key, []).append(wall * 1e-6 / flops)
+        except (KeyError, TypeError, AttributeError) as e:
+            log.warning("cost model: malformed bench baseline %s (%s); "
+                        "falling back to uncalibrated defaults", path, e)
+            return cls(**kwargs)
+        if not rates:
+            log.warning("cost model: bench baseline %s has no usable "
+                        "variant rows; falling back to uncalibrated "
+                        "defaults", path)
+            return cls(**kwargs)
+        table = {k: _median(v) for k, v in rates.items()}
         return cls(table=table, **kwargs)
+
+    # ---------------- pricing ----------------
 
     def rate(self, pipeline: str, variant_name: str) -> float:
         return self.table.get((pipeline, variant_name), self.sec_per_flop)
@@ -87,3 +287,96 @@ class CostModel:
         margin: its lane time was already paid for as filler."""
         return self.launch_overhead + lanes * self.lane_cost(
             pipeline, variant, shapes)
+
+    # ---------------- the online loop ----------------
+
+    def observe(self, pipeline: str, variant, shapes, lanes: int,
+                measured: float) -> None:
+        """Feed one measured launch back into the model (module
+        docstring): record the pair's drift ratio, and — when adaptive —
+        re-fit its ``sec_per_flop`` and the shared ``launch_overhead``
+        through the robust estimators.  Non-positive / non-finite
+        measurements are ignored."""
+        if measured is None or not math.isfinite(measured) \
+                or measured <= 0.0:
+            return
+        pair = (pipeline, variant.name)
+        predicted = self.launch_cost(pipeline, variant, shapes, lanes)
+        drift = self._drift.get(pair)
+        if drift is None:
+            drift = self._drift[pair] = _PairDrift()
+        drift.observe(predicted / measured, self.config.calibration_alpha)
+        if not self.adaptive:
+            return
+        flops = lanes * variant.model_flops(shapes)
+        cfg = self.config
+        # coordinate descent on the residuals: overhead sample with the
+        # pair's CURRENT rate held fixed, then the rate sample with the
+        # current overhead held fixed — a wrong overhead cannot poison
+        # the rate stream once its own estimator has warmed, and vice
+        # versa.
+        oh_sample = measured - flops * self.rate(*pair)
+        if self._oh_est.observe(oh_sample) and self._oh_est.warmed:
+            self.launch_overhead = self._oh_est.value
+        if flops > 0.0:
+            est = self._rate_est.get(pair)
+            if est is None:
+                est = self._rate_est[pair] = self._estimator(
+                    self.rate(*pair), cfg.rate_floor)
+            rate_sample = (measured - self.launch_overhead) / flops
+            if est.observe(rate_sample) and est.warmed:
+                self.table[pair] = est.value
+
+    def source(self, pipeline: str, variant_name: str) -> str:
+        """Where the pair's current rate comes from: ``"online"`` once
+        its estimator has warmed, else ``"bench"`` for offline-calibrated
+        pairs, else ``"default"``."""
+        pair = (pipeline, variant_name)
+        est = self._rate_est.get(pair)
+        if est is not None and est.warmed:
+            return "online"
+        return "bench" if pair in self.calibrated else "default"
+
+    def drift(self) -> dict[str, DriftStat]:
+        """Per-pair drift health, keyed ``"pipeline/variant"`` — every
+        pair that has been observed OR carries a calibrated rate (so
+        bench-calibrated pairs that never see traffic still report
+        their source with ``updates=0``)."""
+        alert_logratio = math.log(self.config.drift_alert_ratio)
+        out: dict[str, DriftStat] = {}
+        for pair in sorted(set(self._drift) | self.calibrated
+                           | set(self.table)):
+            d = self._drift.get(pair)
+            ratio = d.ratio if d is not None else math.nan
+            alert = bool(ratio > 0
+                         and abs(math.log(ratio)) > alert_logratio) \
+                if (d is not None and math.isfinite(ratio)) else False
+            stat = DriftStat(pipeline=pair[0], variant=pair[1],
+                             ratio=ratio,
+                             last=d.last if d is not None else math.nan,
+                             updates=d.updates if d is not None else 0,
+                             source=self.source(*pair), alert=alert)
+            out[stat.key] = stat
+        return out
+
+    def worst_drift(self) -> DriftStat | None:
+        """The observed pair whose EWMA ratio is furthest from 1.0 in
+        log space — the first place to look when attainment slips."""
+        worst, worst_mag = None, -1.0
+        for stat in self.drift().values():
+            if stat.updates == 0 or not math.isfinite(stat.ratio) \
+                    or stat.ratio <= 0:
+                continue
+            mag = abs(math.log(stat.ratio))
+            if mag > worst_mag:
+                worst, worst_mag = stat, mag
+        return worst
+
+    def calibration_updates(self) -> dict[str, int]:
+        """Applied window-median update counts per estimator (the
+        ``"overhead"`` key plus one per pair) — the observability hook
+        for "is the loop actually learning?"."""
+        out = {"overhead": self._oh_est.updates}
+        for (pipeline, vname), est in sorted(self._rate_est.items()):
+            out[f"{pipeline}/{vname}"] = est.updates
+        return out

@@ -5,9 +5,11 @@ Every engine built on :class:`repro.serve.core.EngineCore` owns a
 
   * **launches** — one per dispatched grid (a ``pallas_call`` over a
     lane group): pipeline name, shape key, how many lanes carried real
-    jobs vs. benign padding, and how many of the real lanes were
+    jobs vs. benign padding, how many of the real lanes were
     cross-shape *coalesced* riders (small jobs embedded into a larger
-    bucket's free lanes by the overload policy).
+    bucket's free lanes by the overload policy), and the launch's
+    **measured wall-clock** — the feedback signal the self-tuning cost
+    model (:mod:`repro.serve.cost`) re-fits from.
   * **jobs** — one per completed job: submit and finish timestamps on
     the engine's clock (injectable — tests and trace replays use
     :class:`repro.serve.core.ManualClock`) plus the job's priority
@@ -85,6 +87,10 @@ class LaunchRecord:
     t: float
     variant: str = "base"
     coalesced: int = 0
+    measured: float = math.nan
+    """Measured wall-clock seconds of the launch (stack + pad + execute
+    + scatter), NaN when the engine did not time it — the per-launch
+    truth the cost model's predictions are checked against."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,7 +115,12 @@ class PipelineStats:
     lane_utilization: float      # real lanes / dispatched lanes
     padded_lane_waste: float     # padded lanes / dispatched lanes
     latency: LatencyStats
-    throughput: float            # jobs/s over [first submit, last finish]
+    throughput: float
+    """Jobs/s over [first submit, last finish].  ``0.0`` only for a
+    genuinely empty pipeline (no completed jobs); a zero-width window
+    (jobs that all completed at the same clock instant, e.g. one
+    same-tick batch on a virtual clock) reports NaN — unknown, not
+    dead."""
     dispatch_counts: dict = dataclasses.field(default_factory=dict)
     """Launches per registry variant name — the observable proof that a
     bucket of large / split-complex jobs landed on the fast path."""
@@ -136,6 +147,17 @@ class MetricsSnapshot:
     total_dropped: int = 0
     total_preempted: int = 0
     total_coalesced: int = 0
+    drift: dict = dataclasses.field(default_factory=dict)
+    """``"pipeline/variant" -> repro.serve.cost.DriftStat`` — the cost
+    model's predicted/measured health per pair (EWMA ratio, update
+    count, calibration source).  Empty when the serving engine carries
+    no cost model.  Attached by ``SolverMux.metrics()``; the Recorder
+    itself never sees the cost model."""
+    worst_drift: object | None = None
+    """The DriftStat furthest from ratio 1.0 in log space, or None."""
+    calibration_updates: dict = dataclasses.field(default_factory=dict)
+    """Applied window-median update counts per estimator (``"overhead"``
+    plus one ``"pipeline/variant"`` key per re-fit rate)."""
 
     def __getitem__(self, pipeline: str) -> PipelineStats:
         return self.pipelines[pipeline]
@@ -157,10 +179,11 @@ class Recorder:
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, t: float, variant: str = "base",
-                      coalesced: int = 0) -> None:
+                      coalesced: int = 0,
+                      measured: float = math.nan) -> None:
         self._launches.append(
             LaunchRecord(pipeline, shape, int(real), int(padded), t,
-                         variant, int(coalesced)))
+                         variant, int(coalesced), float(measured)))
 
     def record_job(self, pipeline: str, submitted_at: float,
                    finished_at: float,
@@ -193,7 +216,10 @@ class Recorder:
             if jobs:
                 window = (max(f for _, f, _ in jobs)
                           - min(s for s, _, _ in jobs))
-                thr = len(jobs) / window if window > 0 else 0.0
+                # zero-width window with jobs completed: throughput is
+                # UNKNOWN (one instantaneous batch), not zero — 0.0
+                # would read as a dead pipeline in SLO reports
+                thr = len(jobs) / window if window > 0 else math.nan
             else:
                 thr = 0.0
             per[name] = PipelineStats(

@@ -96,13 +96,14 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.config import global_config
 from repro.serve.core import EngineCore, pad_group
 from repro.serve.cost import CostModel
 from repro.serve.solver import (SolveJob, VariantDispatcher,
                                 resolve_pipeline_spec)
+from repro.serve.tuning import BucketTuner
 
 
 def _bucket_priority(jobs: list[SolveJob]) -> tuple:
@@ -147,9 +148,16 @@ class OverloadPolicy:
     cost_model: CostModel = dataclasses.field(default_factory=CostModel)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Candidate:
-    """One potential grid launch in a policy poll round."""
+    """One potential grid launch in a policy poll round.
+
+    ``eq=False``: candidates are identity objects.  The generated
+    field-wise ``__eq__`` would compare ``jobs`` lists of SolveJobs
+    holding numpy arrays — ``admitted.remove(victim)`` in ``_admit``
+    then raises "truth value of an array is ambiguous" the moment a
+    preemption plan coexists with another candidate from the same
+    bucket."""
 
     pool: "_LanePool"
     key: tuple
@@ -216,20 +224,54 @@ class SolverMux(EngineCore):
       options   per-pipeline kwargs bound into the served kernel, e.g.
                 ``{"mmse_equalize": {"sigma2": 0.05}}``
       clock     zero-arg time source (default ``time.monotonic``)
+      wall      measurement clock for launch wall-clock (default
+                ``time.perf_counter``) — feeds the cost model's
+                calibration loop, independent of the scheduling clock
+      cost_model  :class:`~repro.serve.cost.CostModel` used WITHOUT a
+                policy (pricing + drift observability only); with a
+                policy the policy's model wins and this must stay unset
+      adapt     enable the :class:`~repro.serve.tuning.BucketTuner`
+                (observed-traffic per-bucket ``max_wait`` + per-pool
+                pressure); ``None`` defers to
+                ``REPRO_SERVE_ADAPT_THRESHOLDS``
+
+    Every launch is measured (``wall``) and fed back through
+    :meth:`observe_launch` to whichever cost model is attached — the
+    predict -> measure -> re-fit loop whose drift metrics
+    :meth:`metrics` folds into the snapshot.
     """
 
     def __init__(self, lanes: int = 8, *, max_wait: float | None = None,
-                 pressure: int | None = None, clock=None,
+                 pressure: int | None = None, clock=None, wall=None,
                  policy: OverloadPolicy | None = None,
+                 cost_model: CostModel | None = None,
+                 adapt: bool | None = None,
                  options: dict[str, dict] | None = None):
-        super().__init__(lanes, clock=clock)
+        super().__init__(lanes, clock=clock, wall=wall)
+        if policy is not None and cost_model is not None:
+            raise ValueError("pass cost_model either directly (no "
+                             "policy) or on the policy, not both")
         self.max_wait = max_wait
         self.pressure = 4 * lanes if pressure is None else pressure
         self.policy = policy
+        self._cost_model = cost_model
+        if adapt is None:
+            adapt = global_config.adapt_thresholds
+        self.tuner = BucketTuner(lanes, cost_model=self.cost_model) \
+            if adapt else None
         self._options = dict(options or {})
         self._pools: dict[str, _LanePool] = {}
         self._seq = 0
         self.events: list[dict] = []
+
+    @property
+    def cost_model(self) -> CostModel | None:
+        """The one model pricing and observing this mux's launches: the
+        policy's when a policy is attached, else the directly-passed
+        one, else None."""
+        if self.policy is not None:
+            return self.policy.cost_model
+        return self._cost_model
 
     # ---------------- submission / routing ----------------
 
@@ -237,9 +279,8 @@ class SolverMux(EngineCore):
         pool = self._pools.get(pipeline)
         if pool is None:
             spec = resolve_pipeline_spec(pipeline)
-            cost_model = self.policy.cost_model if self.policy else None
             pool = _LanePool(spec, self._options.get(pipeline, {}),
-                             cost_model)
+                             self.cost_model)
             self._pools[pipeline] = pool
         return pool
 
@@ -265,7 +306,38 @@ class SolverMux(EngineCore):
                        submitted_at=self.clock(), seq=self._seq,
                        priority=priority)
         pool.enqueue(job)
+        if self.tuner is not None:
+            self.tuner.note_arrival(pipeline, job.shape_key(),
+                                    job.submitted_at)
         return job
+
+    def observe_launch(self, spec, variant, key: tuple, lanes: int,
+                       measured: float) -> None:
+        """Close the calibration loop: every measured launch feeds the
+        attached cost model (drift tracking always; rate/overhead
+        re-fitting when the model is adaptive) and the threshold tuner
+        when one is enabled."""
+        cm = self.cost_model
+        if cm is not None:
+            shapes = tuple(shape for shape, _ in key)
+            cm.observe(spec.name,
+                       variant if variant is not None else spec.base,
+                       shapes, lanes, measured)
+        if self.tuner is not None:
+            self.tuner.note_launch(spec.name, lanes, measured)
+
+    def metrics(self):
+        """Recorder snapshot plus — when a cost model is attached — the
+        per-(pipeline, variant) drift stats, worst offender, and
+        calibration update counts (the SLO-side view of the online
+        loop)."""
+        snap = self.recorder.snapshot()
+        cm = self.cost_model
+        if cm is not None:
+            snap = dataclasses.replace(
+                snap, drift=cm.drift(), worst_drift=cm.worst_drift(),
+                calibration_updates=cm.calibration_updates())
+        return snap
 
     def pending(self) -> int:
         return sum(p.queued() for p in self._pools.values())
@@ -312,9 +384,12 @@ class SolverMux(EngineCore):
                        for i in range(len(key))]
             padded, pad = pad_group(spec, stacked, self.lanes,
                                     variant=variant)
-            res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
+            res, measured = self._timed_call(fn, padded)
             self.record_launch(spec.name, key, len(chunk) + len(riders),
-                               pad, variant.name, coalesced=len(riders))
+                               pad, variant.name, coalesced=len(riders),
+                               measured=measured)
+            self.observe_launch(spec, variant, key,
+                                len(chunk) + len(riders) + pad, measured)
             done = []
             for i, job in enumerate(chunk):
                 job.out = res[i]
@@ -358,12 +433,37 @@ class SolverMux(EngineCore):
             pool.age.pop(key, None)
         return done
 
-    def _expired(self, jobs: list[SolveJob], now: float) -> bool:
+    def _bucket_max_wait(self, pool: "_LanePool | None", key: tuple,
+                         queued: int) -> float | None:
+        """Effective age threshold for one partial bucket: the tuner's
+        observed-inter-arrival pick when enabled and warmed, else the
+        constructor ``max_wait``."""
+        if self.tuner is not None and pool is not None:
+            return self.tuner.max_wait(pool.spec.name, key, queued,
+                                       self.max_wait)
+        return self.max_wait
+
+    def _pool_pressure(self, pool: "_LanePool") -> int:
+        """Effective pressure threshold for one pool: the tuner's
+        launch-cost-amortizing pick when enabled and warmed, else the
+        constructor ``pressure``."""
+        if self.tuner is not None:
+            return self.tuner.pressure(pool.spec.name, self.pressure)
+        return self.pressure
+
+    def _under_pressure(self, pool: "_LanePool") -> bool:
+        return pool.queued() >= self._pool_pressure(pool)
+
+    def _expired(self, jobs: list[SolveJob], now: float,
+                 pool: "_LanePool | None" = None,
+                 key: tuple | None = None) -> bool:
         deadline, _ = _bucket_priority(jobs)
         if deadline <= now:
             return True
         age = now - min(j.submitted_at for j in jobs)
-        return self.max_wait is not None and age >= self.max_wait
+        max_wait = self._bucket_max_wait(pool, key, len(jobs)) \
+            if key is not None else self.max_wait
+        return max_wait is not None and age >= max_wait
 
     def poll(self, now: float | None = None) -> list[SolveJob]:
         """One continuous-batching round: full lane groups always
@@ -383,7 +483,8 @@ class SolverMux(EngineCore):
                                            now=now))
         for pool, key in self._sorted_buckets():
             jobs = pool.buckets[key]
-            if self._expired(jobs, now) or pool.queued() >= self.pressure:
+            if self._expired(jobs, now, pool, key) \
+                    or self._under_pressure(pool):
                 done.extend(self._flush_bucket(pool, key, full_only=False,
                                                now=now))
         return done
@@ -433,7 +534,7 @@ class SolverMux(EngineCore):
         pol = self.policy
         cands: list[_Candidate] = []
         for pool in self._pools.values():
-            under_pressure = pool.queued() >= self.pressure
+            under_pressure = self._under_pressure(pool)
             for key, jobs in pool.buckets.items():
                 if not jobs:
                     continue
@@ -445,7 +546,7 @@ class SolverMux(EngineCore):
                     cands.append(self._mk_cand(pool, key, chunk, False,
                                                aged, price))
                 if rest and (aged or under_pressure
-                             or self._expired(rest, now)):
+                             or self._expired(rest, now, pool, key)):
                     cands.append(self._mk_cand(pool, key, rest, True,
                                                aged, price))
         cands.sort(key=lambda c: (not c.aged, c.deadline, c.seq))
@@ -606,7 +707,7 @@ class SolverMux(EngineCore):
                             jobs=[j.seq for j in donor.jobs],
                             ride_cost=_round(ride), own_cost=_round(own))
             # (2) queued donors that were not admitted this round
-            under_pressure = pool.queued() >= self.pressure
+            under_pressure = self._under_pressure(pool)
             for dkey, djobs in list(pool.buckets.items()):
                 if free <= 0:
                     break
@@ -614,7 +715,8 @@ class SolverMux(EngineCore):
                     continue
                 if not spec.coalesce.compatible(dkey, cand.key):
                     continue
-                if not (under_pressure or self._expired(djobs, now)):
+                if not (under_pressure or self._expired(djobs, now,
+                                                        pool, dkey)):
                     continue        # no pressure, donor can keep waiting
                 avail = [j for j in djobs if id(j) not in taken]
                 k = min(free, len(avail))

@@ -18,9 +18,11 @@ import numpy as np
 from repro.serve.core import FifoEngineCore
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SolveJob:
-    """One solver problem.
+    """One solver problem.  (``eq=False``: jobs are identity objects —
+    the generated field-wise ``__eq__`` would compare numpy array args,
+    which raises instead of answering.)
 
     ``args`` are the per-problem arrays WITHOUT the batch dimension
     (e.g. cholesky_solve: ``(a (N,N), b (N,M))``); ``out`` is filled by
@@ -139,6 +141,18 @@ class PipelineEngine(FifoEngineCore):
     def submit(self, job: SolveJob) -> SolveJob:
         job.pipeline = self.spec.name
         return super().submit(job)
+
+    def observe_launch(self, spec, variant, key, lanes, measured):
+        """Feed measured launch wall-clock to the dispatcher's cost
+        model when one is attached (set ``engine._dispatcher.cost_model``
+        or pass one to the dispatcher) — same calibration loop as the
+        mux, no-op otherwise."""
+        cm = self._dispatcher.cost_model
+        if cm is not None:
+            shapes = tuple(shape for shape, _ in key)
+            cm.observe(spec.name,
+                       variant if variant is not None else spec.base,
+                       shapes, lanes, measured)
 
     def run(self) -> list[SolveJob]:
         done: list[SolveJob] = []

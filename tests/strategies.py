@@ -47,7 +47,7 @@ except ModuleNotFoundError:
 
 __all__ = [
     "HAVE_HYPOTHESIS", "fuzzed", "integers", "floats", "sampled",
-    "traces", "TRACE_PIPELINES", "TRACE_SIZES",
+    "traces", "cost_streams", "TRACE_PIPELINES", "TRACE_SIZES",
     "spd_system", "tall_system", "channel_planes",
 ]
 
@@ -78,6 +78,14 @@ def traces(max_len: int = 16):
     return ("traces", max_len)
 
 
+def cost_streams(max_len: int = 64, lo: float = 1e-9, hi: float = 10.0):
+    """Random measured-launch-cost streams for the cost-model
+    calibration properties (tests/test_cost_adaptive.py): non-empty
+    lists of positive finite seconds spanning ns..10 s — wide enough to
+    include pathological outliers the robust estimator must shrug off."""
+    return ("cost_streams", max_len, lo, hi)
+
+
 def _resolve(spec):
     kind = spec[0]
     if kind == "integers":
@@ -94,6 +102,10 @@ def _resolve(spec):
             _st.integers(min_value=0, max_value=4),   # 0 = no deadline
             _st.integers(min_value=0, max_value=2))   # arrival gap
         return _st.lists(entry, min_size=1, max_size=spec[1])
+    if kind == "cost_streams":
+        sample = _st.floats(min_value=spec[2], max_value=spec[3],
+                            allow_nan=False, allow_infinity=False)
+        return _st.lists(sample, min_size=1, max_size=spec[1])
     raise ValueError(f"unknown strategy spec: {spec!r}")
 
 

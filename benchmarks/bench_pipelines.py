@@ -35,7 +35,12 @@ coalesced counters (rows required by ``check_bench_json``), and the
 DRIFT sweep: the same trace with the cost model's online calibration
 loop closed, persisting per-variant predicted/measured drift ratios and
 calibration-update counts (``serve_slo/drift/*`` rows, also required by
-``check_bench_json``).
+``check_bench_json``), and the SHARDED sweep: the overload trace
+replayed on a fixed virtual window against mesh-sharded muxes (mesh
+sizes 1/2/4/8 on virtual CPU devices), persisting aggregate throughput
+scaling, per-shard utilization, and the per-mesh launch calibration
+rows (``serve_slo/sharded/*``, also gated by ``check_bench_json``:
+mesh=4 throughput must strictly beat mesh=1).
 """
 from __future__ import annotations
 
@@ -47,7 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, emit_variant, header, timeit
+from benchmarks.common import (emit, emit_sharded, emit_variant, header,
+                               timeit)
 from repro import kernels as K
 from repro import pipelines as pp
 from repro.kernels import ref
@@ -316,3 +322,45 @@ def run_slo() -> None:
          float(sum(ups.values())),
          ";".join(f"{k}={v}" for k, v in sorted(ups.items())),
          unit="count")
+
+    # ---- mesh-sharded scaling sweep: the overload trace on a fixed
+    # virtual window against 1/2/4/8-shard lane meshes (virtual CPU
+    # devices) — aggregate throughput, per-shard utilization, and the
+    # per-mesh calibration rows from_bench_json re-fits shard overheads
+    # from (rows required by check_bench_json) ----
+    from repro.launch.serve_solvers import run_sharded_overload
+
+    n_dev = jax.device_count()
+    header(f"serve SLO sharded: mesh scaling sweep on {n_dev} devices")
+    throughput: dict[int, float] = {}
+    for mesh in (1, 2, 4, 8):
+        if mesh > n_dev:
+            emit(f"serve_slo/sharded/mesh{mesh}/skipped", 0.0,
+                 f"needs {mesh} devices, have {n_dev}", unit="count")
+            continue
+        s = run_sharded_overload(mesh)
+        throughput[mesh] = s["throughput"]
+        emit(f"serve_slo/sharded/mesh{mesh}/throughput",
+             s["throughput"],
+             f"jobs={s['jobs']},done={s['done']},"
+             f"launches={s['launches']},spanning={s['spanning']},"
+             f"pending={s['pending']}", unit="rate")
+        emit(f"serve_slo/sharded/mesh{mesh}/attainment",
+             s["attainment_hard"] * 100.0,
+             f"dropped={s['dropped']}", unit="percent")
+        util = s["shard_util"]
+        mean_util = sum(util.values()) / len(util)
+        imb = s["imbalance"]
+        emit(f"serve_slo/sharded/mesh{mesh}/shard_util",
+             mean_util * 100.0,
+             ";".join(f"s{k}={v * 100:.0f}%"
+                      for k, v in sorted(util.items()))
+             + (f";imbalance={imb:.3f}" if math.isfinite(imb) else ""),
+             unit="percent")
+        for row in s["calibration"]:
+            emit_sharded(**row)
+    if 1 in throughput and 4 in throughput and throughput[1] > 0:
+        emit("serve_slo/sharded/speedup_mesh4",
+             throughput[4] / throughput[1],
+             f"mesh4={throughput[4]:.2f}/tick,"
+             f"mesh1={throughput[1]:.2f}/tick", unit="ratio")

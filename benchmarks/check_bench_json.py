@@ -13,9 +13,18 @@ zero hard-deadline drops and non-zero dropped/coalesced counters — so
 the baseline JSON is regenerated with ``--only variants,serve_slo``.
 
 Every row must also declare a known ``unit`` (``us`` / ``percent`` /
-``ratio`` / ``count``; attainment rows must be ``percent``), and the
-``serve_slo/drift/*`` rows from the online-calibration sweep must be
-present with at least one pair actually observed (``updates > 0``).
+``ratio`` / ``count`` / ``rate``; attainment rows must be ``percent``),
+and the ``serve_slo/drift/*`` rows from the online-calibration sweep
+must be present with at least one pair actually observed
+(``updates > 0``).
+
+The mesh-sharded scaling sweep is gated too: ``serve_slo/sharded/*``
+throughput and shard-utilization rows must exist for mesh sizes 1, 2,
+and 4 with the right units, mesh=4 aggregate throughput must strictly
+beat mesh=1 (and meet the 3x scaling floor — the sweep replays a
+deterministic virtual-clock trace, so this is exact, not flaky), and
+the payload's ``sharded`` calibration rows must include measured
+mesh > 1 launches.
 
   PYTHONPATH=src python -m benchmarks.check_bench_json BENCH_pipelines.json
 """
@@ -130,11 +139,53 @@ def check(path: str) -> None:
     assert live, ("every drift row has updates=0 — the calibration "
                   "loop observed no launches")
 
+    # Mesh-sharded scaling rows: the sweep must cover mesh sizes 1/2/4
+    # (8 virtual CPU devices are forced by benchmarks.run, so these can
+    # never be skipped on a CI runner), carry the declared units, and
+    # actually scale — mesh=4 aggregate lane throughput strictly above
+    # mesh=1 and at least 3x it.  The trace and clock are deterministic
+    # (virtual-clock replay), so the floor is exact.
+    thr = {}
+    for mesh in (1, 2, 4):
+        t = rows.get(f"serve_slo/sharded/mesh{mesh}/throughput")
+        u = rows.get(f"serve_slo/sharded/mesh{mesh}/shard_util")
+        assert t and u, (
+            f"serve_slo sharded rows missing for mesh={mesh} — "
+            "regenerate with `--only variants,serve_slo --json-out ...`")
+        assert t["unit"] == "rate", (
+            f"sharded throughput row for mesh={mesh} must carry "
+            f"unit='rate', got {t['unit']!r}")
+        assert u["unit"] == "percent", (
+            f"shard_util row for mesh={mesh} must carry "
+            f"unit='percent', got {u['unit']!r}")
+        assert t["us_per_call"] > 0, (
+            f"mesh={mesh} sharded throughput is not positive: "
+            f"{t['us_per_call']}")
+        thr[mesh] = t["us_per_call"]
+    assert thr[4] > thr[1], (
+        f"mesh=4 throughput ({thr[4]}/tick) must strictly beat mesh=1 "
+        f"({thr[1]}/tick)")
+    assert thr[4] >= 3.0 * thr[1], (
+        f"mesh=4 throughput ({thr[4]}/tick) below the 3x scaling floor "
+        f"over mesh=1 ({thr[1]}/tick)")
+    speedup = rows.get("serve_slo/sharded/speedup_mesh4")
+    assert speedup and speedup["unit"] == "ratio", (
+        "serve_slo/sharded/speedup_mesh4 ratio row missing")
+    sharded = payload.get("sharded", [])
+    spanning = [rec for rec in sharded if rec.get("mesh", 1) > 1]
+    assert spanning, ("payload 'sharded' section has no mesh > 1 "
+                      "calibration rows")
+    for rec in spanning:
+        assert rec["wall_us"] > 0, f"zero sharded wall-clock: {rec}"
+        assert rec["model_flops"] > 0, f"zero sharded flops: {rec}"
+
     print(f"{path}: ok — {len(payload['rows'])} rows (units checked), "
           f"{len(expected)} pipeline variants all exercised, "
           f"tiled at n>=512 on {sorted(tiled_specs)}, overload SLO "
           f"{on['us_per_call']:.0f}% > {off['us_per_call']:.0f}% baseline, "
-          f"{len(live)} drift pairs observed")
+          f"{len(live)} drift pairs observed, sharded mesh4 "
+          f"{thr[4] / thr[1]:.1f}x mesh1 ({len(spanning)} spanning "
+          f"calibration rows)")
 
 
 if __name__ == "__main__":

@@ -4,21 +4,23 @@ and the variant-dispatch record feeding ``BENCH_pipelines.json``.
 
 Every row carries an explicit ``unit``: ``"us"`` for wall-clock numbers
 (the default), ``"percent"`` for attainment-style rows, ``"ratio"`` for
-dimensionless rows like the cost-model drift (predicted/measured), and
-``"count"`` for event counters (launches, calibration updates).  The
-value still travels in the ``us_per_call`` field for schema continuity,
-but consumers must check ``unit`` before treating it as microseconds —
-``benchmarks.check_bench_json`` enforces this."""
+dimensionless rows like the cost-model drift (predicted/measured),
+``"count"`` for event counters (launches, calibration updates), and
+``"rate"`` for per-virtual-tick throughputs (the mesh-sharded scaling
+sweep).  The value still travels in the ``us_per_call`` field for schema
+continuity, but consumers must check ``unit`` before treating it as
+microseconds — ``benchmarks.check_bench_json`` enforces this."""
 from __future__ import annotations
 
 import time
 
 import jax
 
-UNITS = ("us", "percent", "ratio", "count")
+UNITS = ("us", "percent", "ratio", "count", "rate")
 
 ROWS: list[tuple[str, float, str, str]] = []
 VARIANTS: list[dict] = []
+SHARDED: list[dict] = []
 
 
 def timeit(fn, *args, reps: int = 20, warmup: int = 3) -> float:
@@ -53,3 +55,11 @@ def emit_variant(**fields) -> None:
     dispatches, model_flops, wall-clock) for the ``--json-out``
     baseline."""
     VARIANTS.append(fields)
+
+
+def emit_sharded(**fields) -> None:
+    """Record one mesh-sharded launch calibration row (pipeline,
+    variant, mesh, lanes, wall_us, model_flops) for the ``--json-out``
+    baseline — the rows ``CostModel.from_bench_json`` re-fits per-mesh
+    launch overheads from."""
+    SHARDED.append(fields)

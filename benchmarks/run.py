@@ -23,6 +23,13 @@ import json
 import sys
 import time
 
+# 8 virtual CPU devices (merged into XLA_FLAGS before the first jax
+# import; an explicit device count in the env is respected) so the
+# serve_slo entry can sweep mesh sizes up to 8 on a CPU-only runner
+from repro.launch.xla_env import force_host_device_count
+
+force_host_device_count(8)
+
 from benchmarks import (bench_control_overhead, bench_latency,
                         bench_masking_util, bench_mechanisms,
                         bench_pipelines, bench_roofline, bench_throughput,
@@ -60,6 +67,7 @@ def json_payload(ran: list[str]) -> dict:
                  for n, us, d, u in common.ROWS],
         "variants": common.VARIANTS,
         "dispatch_counts": counts,
+        "sharded": common.SHARDED,
     }
 
 

@@ -17,9 +17,20 @@ With ``--adapt`` the cost model's online calibration loop runs too:
 every launch is measured, sec/FLOP and launch overhead re-fit, and the
 per-variant predicted/measured drift printed at the end.
 
+With ``--mesh N`` the mux pools lanes over N local devices (on CPU the
+script forces 8 virtual devices): full lane groups place on the
+least-loaded shard, hot buckets flush as one mesh-spanning shard_map
+launch, and the per-shard utilization / imbalance metrics print at the
+end.
+
   PYTHONPATH=src python examples/mixed_solver_traffic.py --policy --adapt
+  PYTHONPATH=src python examples/mixed_solver_traffic.py --policy --mesh 4
 """
 import argparse
+
+from repro.launch.xla_env import force_host_device_count
+
+force_host_device_count(8)
 
 import numpy as np
 
@@ -38,6 +49,10 @@ def main():
     ap.add_argument("--adapt", action="store_true",
                     help="close the cost-model calibration loop and "
                          "print drift metrics")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="shard the lane pools over this many local "
+                         "devices (mesh-spanning flushes + cross-shard "
+                         "balancing)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -51,7 +66,8 @@ def main():
     elif args.adapt:
         cost_model = CostModel(adaptive=True)
     mux = SolverMux(lanes=args.lanes, max_wait=2e-3, clock=clock,
-                    policy=policy, cost_model=cost_model)
+                    policy=policy, cost_model=cost_model,
+                    mesh_size=args.mesh)
 
     def make(pipeline, n):
         m = n + 4
@@ -114,6 +130,14 @@ def main():
         print(f"policy: dropped={snap.total_dropped} "
               f"preempted={snap.total_preempted} "
               f"coalesced={snap.total_coalesced}")
+    if snap.shards:
+        print(f"\nmesh: {len(snap.shards)} lane shards, imbalance "
+              f"{snap.shard_imbalance:.3f}"
+              f"{'  ALERT' if snap.shard_imbalance_alert else ''}")
+        for s, st in sorted(snap.shards.items()):
+            print(f"  shard {s}: launches {st.launches:>3} "
+                  f"lanes {st.lanes_dispatched:>4} "
+                  f"util {st.utilization:>5.2f} load {st.load:.2e}")
     if snap.drift:
         print("\ncost-model drift (predicted/measured, EWMA ratio):")
         for key, st in sorted(snap.drift.items()):

@@ -1,10 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 Proves the distribution config is coherent without hardware:
-  - 512 placeholder host devices (set above, BEFORE any jax import)
+  - 512 placeholder host devices (merged into XLA_FLAGS below, BEFORE
+    any jax import; an existing device-count flag or other user flags
+    are respected, not clobbered)
   - 16x16 single-pod and 2x16x16 multi-pod production meshes
   - per cell: .lower() -> .compile() -> memory_analysis / cost_analysis /
     HLO roll-up costs (roofline terms), appended to a JSONL artifact.
@@ -15,6 +14,10 @@ Usage:
   python -m repro.launch.dryrun --all --out results.jsonl   (driver mode:
       one subprocess per cell so XLA state/memory is isolated)
 """
+from repro.launch.xla_env import force_host_device_count
+
+force_host_device_count(512)
+
 import argparse
 import dataclasses
 import json

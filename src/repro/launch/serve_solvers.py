@@ -39,6 +39,13 @@ import time
 
 import numpy as np
 
+# launcher module: 8 virtual CPU devices (merged into XLA_FLAGS before
+# the first jax import; an explicit device count in the env wins) so
+# --mesh N and run_sharded_overload work standalone on a CPU-only host
+from repro.launch.xla_env import force_host_device_count
+
+force_host_device_count(8)
+
 from repro import kernels as K
 from repro.kernels.common import sample_spd
 from repro.serve import CostModel, ManualClock, OverloadPolicy, SolverMux
@@ -247,6 +254,95 @@ def run_overload(policy: bool, *, ticks: int = 8, lanes: int = 4,
     return summary
 
 
+def run_sharded_overload(mesh_size: int, *, ticks: int = 6,
+                         lanes: int = 4, load_lanes: int | None = None,
+                         seed: int = 0) -> dict:
+    """Virtual-clock replay of the committed overload trace against a
+    mesh of ``mesh_size`` lane shards — the scaling scenario behind
+    ``benchmarks.bench_pipelines.run_slo``'s ``serve_slo/sharded/*``
+    rows.
+
+    The offered load is generated for ``load_lanes`` lanes (default
+    ``8 * lanes`` — saturating even the largest swept mesh) and replayed
+    over a FIXED virtual window of ``2 * ticks`` one-tick polls with NO
+    final drain, so ``throughput`` measures steady-state capacity at
+    this mesh size, not how fast a drain call empties the queue.  Every
+    mesh size sees the identical trace and window; only the lane-pool
+    capacity (``lanes * mesh_size``) changes.
+
+    Returns the summary the benchmark emits: aggregate job throughput
+    (jobs per virtual tick), hard-SLO attainment, launch counts (total
+    and mesh-spanning), per-shard lane utilization, and the measured
+    per-(pipeline, variant, mesh) calibration rows ``from_bench_json``
+    re-fits shard overheads from."""
+    if load_lanes is None:
+        load_lanes = 8 * lanes
+    cm = CostModel()
+    spec = K.get("mmse_equalize")
+    unit = cm.launch_cost("mmse_equalize", spec.base,
+                          ((12, 8), (12, 2)), lanes)
+    pol = OverloadPolicy(budget=2.0 * mesh_size * unit, cost_model=cm)
+    trace = overload_trace(ticks, load_lanes, seed)
+    jobs, clock = [], ManualClock()
+    mux = SolverMux(lanes=lanes, clock=clock, pressure=2 * lanes,
+                    policy=pol, mesh_size=mesh_size)
+    by_tick: dict[int, list[dict]] = {}
+    for entry in trace:
+        by_tick.setdefault(entry["tick"], []).append(entry)
+    for t in range(ticks + ticks):        # arrival ticks + drain ticks
+        for e in by_tick.get(t, ()):
+            jobs.append(mux.submit(
+                e["pipeline"],
+                *job_args(e["pipeline"], e["n"], e["k"], e["seed"]),
+                deadline=clock() + e["deadline_ticks"] * OVERLOAD_TICK,
+                priority=e["priority"]))
+        mux.poll()
+        clock.advance(OVERLOAD_TICK)
+    # NO mux.run(): the window is fixed, so throughput compares capacity
+    window = 2 * ticks * OVERLOAD_TICK
+    snap = mux.metrics()
+    done = sum(1 for j in jobs if j.state == "done")
+    spanning = sum(1 for l in snap.launches if l.mesh > 1)
+    if snap.shards:
+        shard_util = {s: st.utilization for s, st in snap.shards.items()}
+    else:
+        real = sum(l.real for l in snap.launches)
+        width = sum(l.real + l.padded for l in snap.launches)
+        shard_util = {0: (real / width) if width else 0.0}
+    calibration = []
+    by_pvm: dict[tuple, list] = {}
+    for l in snap.launches:
+        if not math.isnan(l.measured):
+            by_pvm.setdefault((l.pipeline, l.variant, l.mesh),
+                              []).append(l)
+    for (pipeline, vname, mesh), recs in sorted(by_pvm.items()):
+        pspec = K.get(pipeline)
+        variant = pspec.base if vname == "base" else \
+            next(v for v in pspec.variants if v.name == vname)
+        shapes = tuple(tuple(shape) for shape, _ in recs[0].shape)
+        walls = sorted(l.measured for l in recs)
+        calibration.append({
+            "pipeline": pipeline, "variant": vname, "mesh": mesh,
+            "lanes": recs[0].real + recs[0].padded,
+            "wall_us": walls[len(walls) // 2] * 1e6,
+            "model_flops": variant.model_flops(shapes),
+        })
+    return {
+        "mesh": mesh_size,
+        "jobs": len(jobs),
+        "done": done,
+        "throughput": done / window,
+        "attainment_hard": hard_attainment(jobs),
+        "dropped": snap.total_dropped,
+        "launches": snap.total_launches,
+        "spanning": spanning,
+        "shard_util": shard_util,
+        "imbalance": snap.shard_imbalance,
+        "pending": mux.pending(),
+        "calibration": calibration,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=8,
@@ -271,6 +367,11 @@ def main(argv=None):
                          "every launch, re-fit sec/FLOP + overhead, tune "
                          "flush thresholds from observed traffic, and "
                          "report drift (predicted/measured) per variant")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="lane-shard count: span each pool's lane axis "
+                         "over this many local devices (needs "
+                         "--xla_force_host_platform_device_count or "
+                         "real devices; default REPRO_SERVE_MESH_SIZE)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.budget_us is not None and not args.policy:
@@ -290,7 +391,7 @@ def main(argv=None):
         cost_model = CostModel(adaptive=True)
     mux = SolverMux(lanes=args.lanes, max_wait=args.max_wait_ms * 1e-3,
                     clock=clock, policy=policy, cost_model=cost_model,
-                    adapt=args.adapt or None)
+                    adapt=args.adapt or None, mesh_size=args.mesh)
 
     t0 = time.perf_counter()
     jobs, done, sample = [], [], None
@@ -346,6 +447,12 @@ def main(argv=None):
         print(f"overload policy: dropped={snap.total_dropped} "
               f"preempted={snap.total_preempted} "
               f"coalesced={snap.total_coalesced}")
+    if snap.shards:
+        util = " ".join(f"s{s}:{st.utilization:.2f}"
+                        for s, st in sorted(snap.shards.items()))
+        alert = "  ALERT" if snap.shard_imbalance_alert else ""
+        print(f"mesh: {mux.mesh_size} shards, util {util}, "
+              f"imbalance {snap.shard_imbalance:.2f}{alert}")
     if snap.drift:
         print("cost-model drift (predicted/measured, EWMA ratio):")
         for key, st in sorted(snap.drift.items()):

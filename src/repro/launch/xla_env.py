@@ -1,0 +1,37 @@
+"""XLA host-platform virtual-device setup, import-order safe.
+
+Several entry points (the dry-run driver, the test session, the bench
+driver) need jax's CPU backend split into N placeholder devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.  The flag only
+takes effect if it is in the environment BEFORE the first jax import,
+and naively assigning ``os.environ["XLA_FLAGS"]`` discards whatever
+flags the user already set.  :func:`force_host_device_count` is the one
+shared, merge-don't-clobber implementation:
+
+  * existing ``XLA_FLAGS`` content is preserved (the new flag is
+    appended), and
+  * an already-present ``xla_force_host_platform_device_count`` wins —
+    the caller's N is NOT applied over an explicit user choice.
+
+Deliberately jax-free: importing this module never initializes a
+backend, so it is safe to call from conftest files and module top-levels
+that must run before jax.
+"""
+from __future__ import annotations
+
+import os
+
+DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> bool:
+    """Merge ``--xla_force_host_platform_device_count=n`` into
+    ``XLA_FLAGS``.  Returns True when the flag was applied, False when
+    an existing device-count flag was respected instead.  Must run
+    before the first jax import to have any effect."""
+    existing = os.environ.get("XLA_FLAGS", "")
+    if DEVICE_COUNT_FLAG.lstrip("-") in existing:
+        return False
+    os.environ["XLA_FLAGS"] = \
+        f"{existing} {DEVICE_COUNT_FLAG}={int(n)}".strip()
+    return True

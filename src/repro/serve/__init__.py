@@ -22,7 +22,10 @@ lane-pool accounting + batch lifecycle):
                                          thresholds: max_wait, pressure)
   metrics  SLO dataclasses: p50/p99 latency (overall + per priority),
            throughput, lane utilization, padded-lane waste, dropped/
-           preempted/coalesced counters
+           preempted/coalesced counters, per-shard utilization
+  shard    LaneShards                   (mesh-sharded lane pools:
+                                         shard_map wrapping, placement,
+                                         per-shard load accounting)
   engine   back-compat shim re-exporting the original names
 
 The kernel registry (``repro.kernels``) is the routing table: any
@@ -36,8 +39,10 @@ from repro.serve.cost import (CostModel, DriftStat,  # noqa: F401
                               RobustEstimator)
 from repro.serve.metrics import (DropRecord, LatencyStats,  # noqa: F401
                                  LaunchRecord, MetricsSnapshot,
-                                 PipelineStats, Recorder)
+                                 PipelineStats, Recorder, ShardStats,
+                                 shard_stats)
 from repro.serve.mux import OverloadPolicy, SolverMux  # noqa: F401
+from repro.serve.shard import LaneShards  # noqa: F401
 from repro.serve.solver import (PipelineEngine, SolveJob,  # noqa: F401
                                 VariantDispatcher)
 from repro.serve.tuning import BucketTuner  # noqa: F401
@@ -58,5 +63,6 @@ __all__ = [
     "OverloadPolicy", "CostModel", "DriftStat", "RobustEstimator",
     "ServeConfig", "global_config", "BucketTuner",
     "DropRecord", "LatencyStats", "LaunchRecord", "MetricsSnapshot",
-    "PipelineStats", "Recorder",
+    "PipelineStats", "Recorder", "ShardStats", "shard_stats",
+    "LaneShards",
 ]

@@ -29,6 +29,10 @@ wait_floor                REPRO_SERVE_WAIT_FLOOR             0.0
 wait_cap                  REPRO_SERVE_WAIT_CAP               5e-3
 pressure_gain             REPRO_SERVE_PRESSURE_GAIN          8.0
 pressure_cap_lanes        REPRO_SERVE_PRESSURE_CAP_LANES     8
+mesh_size                 REPRO_SERVE_MESH_SIZE              1
+shard_split_pressure      REPRO_SERVE_SHARD_SPLIT_PRESSURE   2.0
+steal_ratio               REPRO_SERVE_STEAL_RATIO            1.0
+imbalance_alert           REPRO_SERVE_IMBALANCE_ALERT        1.5
 ========================  =================================  ========
 
 * ``calibrate`` — master switch for ONLINE re-fitting: with it off, a
@@ -63,6 +67,24 @@ pressure_cap_lanes        REPRO_SERVE_PRESSURE_CAP_LANES     8
   overhead ``pressure_gain`` times over a drain's lane time.
 * ``pressure_cap_lanes`` — tuned pressure never exceeds this many
   multiples of the pool width (and never drops below one pool width).
+* ``mesh_size`` — default lane-shard count for :class:`SolverMux`
+  instances built without an explicit ``mesh_size``: 1 keeps the
+  single-device path (bit-identical to the pre-mesh stack); N > 1
+  spans each pool's lane axis over the first N local devices via
+  ``distributed.sharding.shard_map`` (aggregate capacity
+  ``lanes * mesh_size``).
+* ``shard_split_pressure`` — a shape bucket whose backlog reaches
+  ``shard_split_pressure * lanes`` jobs is *hot*: the mux offers it as
+  mesh-spanning sharded flushes (cross-shard work stealing) instead of
+  serial per-shard launches, subject to the cost comparison below.
+* ``steal_ratio`` — safety margin on the steal pricing: a hot bucket
+  splits across shards only when ``sharded_cost * steal_ratio <
+  local_cost`` (the serial per-shard launches it replaces), so stealing
+  never beats a cheaper local partial.  1.0 = pure cost comparison;
+  > 1.0 biases toward local launches.
+* ``imbalance_alert`` — per-shard lane-load imbalance ratio
+  (max/mean dispatched lanes) above which ``MetricsSnapshot`` flags
+  ``shard_imbalance_alert``.
 """
 from __future__ import annotations
 
@@ -121,6 +143,13 @@ class ServeConfig:
         self.pressure_gain = _env_float("REPRO_SERVE_PRESSURE_GAIN", 8.0)
         self.pressure_cap_lanes = _env_int(
             "REPRO_SERVE_PRESSURE_CAP_LANES", 8)
+        # ---- mesh-sharded lane pools ----
+        self.mesh_size = _env_int("REPRO_SERVE_MESH_SIZE", 1)
+        self.shard_split_pressure = _env_float(
+            "REPRO_SERVE_SHARD_SPLIT_PRESSURE", 2.0)
+        self.steal_ratio = _env_float("REPRO_SERVE_STEAL_RATIO", 1.0)
+        self.imbalance_alert = _env_float(
+            "REPRO_SERVE_IMBALANCE_ALERT", 1.5)
         return self
 
 

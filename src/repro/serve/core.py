@@ -22,6 +22,7 @@ from __future__ import annotations
 import math
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -77,10 +78,12 @@ class EngineCore:
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, variant: str = "base",
-                      coalesced: int = 0, measured: float = None) -> None:
+                      coalesced: int = 0, measured: float = None,
+                      mesh: int = 1, shard: int = 0) -> None:
         self.recorder.record_launch(
             pipeline, shape, real, padded, self.clock(), variant,
-            coalesced, math.nan if measured is None else measured)
+            coalesced, math.nan if measured is None else measured,
+            mesh, shard)
 
     def record_job(self, pipeline: str, item) -> None:
         """Stamp ``finished_at`` and log the job's latency sample (keyed
@@ -96,27 +99,38 @@ class EngineCore:
     def reset_metrics(self) -> None:
         self.recorder.reset()
 
-    def _timed_call(self, fn, padded: list) -> tuple[np.ndarray, float]:
+    def _timed_call(self, fn, padded: list,
+                    device=None) -> tuple[np.ndarray, float]:
         """Execute one padded lane-group launch and measure its wall
         clock on ``self.wall``.  The one seam every launch goes through:
         deterministic tests replace it with a synthetic wall model to
-        drive the calibration loop without real-timer noise."""
+        drive the calibration loop without real-timer noise.
+
+        ``device`` commits the inputs to one mesh shard's device before
+        the call (mesh-sharded muxes placing a non-spanning launch);
+        ``None`` keeps the legacy default-device path untouched."""
         t0 = self.wall()
-        res = np.asarray(fn(*[jnp.asarray(p) for p in padded]))
+        inputs = [jnp.asarray(p) for p in padded]
+        if device is not None:
+            inputs = [jax.device_put(x, device) for x in inputs]
+        res = np.asarray(fn(*inputs))
         return res, self.wall() - t0
 
     def observe_launch(self, spec, variant, key: tuple, lanes: int,
-                       measured: float) -> None:
+                       measured: float, mesh: int = 1) -> None:
         """Per-launch feedback hook: called after every measured launch
         with the dispatched variant, the bucket key, the full padded
-        lane width, and the measured wall-clock seconds.  The base
-        engine does nothing; cost-model-carrying engines override it to
-        feed :meth:`repro.serve.cost.CostModel.observe`."""
+        lane width, and the measured wall-clock seconds (plus the shard
+        count for mesh-spanning launches; the single-device path never
+        passes ``mesh``, so legacy 5-arg overrides keep working).  The
+        base engine does nothing; cost-model-carrying engines override
+        it to feed :meth:`repro.serve.cost.CostModel.observe`."""
 
     # ---------------- batch lifecycle ----------------
 
     def dispatch_group(self, spec, fn, key: tuple, jobs: list,
-                       variant=None) -> list:
+                       variant=None, mesh: int = 1, shard: int = 0,
+                       device=None) -> list:
         """The one lane-group batch lifecycle, shared by every solver
         engine: stack per-arg, pad to the pool from the (variant's or
         spec's) filler, launch ``fn`` once (measured — the wall-clock is
@@ -126,15 +140,30 @@ class EngineCore:
 
         ``fn`` is the jit'd entry point the caller resolved through
         ``KernelSpec.dispatch_key`` for this shape bucket; ``variant``
-        is the matching registry Variant (None = the spec's base)."""
+        is the matching registry Variant (None = the spec's base).
+
+        ``mesh > 1`` runs a mesh-spanning launch: ``fn`` must be the
+        shard_map-wrapped entry point and the group is padded to the
+        full ``lanes * mesh`` width, so every shard executes a complete
+        ``lanes``-wide slab (no shard ever sees a partial remainder).
+        ``shard``/``device`` place a non-spanning launch on one mesh
+        shard; both default to the legacy single-device behavior."""
+        width = self.lanes * max(1, mesh)
         stacked = [np.stack([np.asarray(j.args[i]) for j in jobs])
                    for i in range(len(jobs[0].args))]
-        padded, pad = pad_group(spec, stacked, self.lanes, variant=variant)
-        res, measured = self._timed_call(fn, padded)
+        padded, pad = pad_group(spec, stacked, width, variant=variant)
+        res, measured = self._timed_call(fn, padded, device=device)
         self.record_launch(spec.name, key, len(jobs), pad,
                            variant.name if variant is not None else "base",
-                           measured=measured)
-        self.observe_launch(spec, variant, key, len(jobs) + pad, measured)
+                           measured=measured, mesh=mesh, shard=shard)
+        if mesh > 1:
+            self.observe_launch(spec, variant, key, len(jobs) + pad,
+                                measured, mesh=mesh)
+        else:
+            # legacy call shape: mesh=1 overrides predating the mesh
+            # path (5-arg signatures) keep working unmodified
+            self.observe_launch(spec, variant, key, len(jobs) + pad,
+                                measured)
         for i, job in enumerate(jobs):
             job.out = res[i]
             if hasattr(job, "state"):

@@ -73,6 +73,12 @@ log = logging.getLogger(__name__)
 # online loop replaces them with measured values.
 DEFAULT_SEC_PER_FLOP = 2e-9
 DEFAULT_LAUNCH_OVERHEAD = 5e-5
+# Extra fixed cost per additional mesh shard participating in a sharded
+# flush (collective setup + multi-device dispatch) — 20% of the launch
+# overhead per shard until the sharded bench rows calibrate the real
+# per-mesh overhead table.  Monotone in mesh size, so splitting is never
+# priced as free.
+DEFAULT_SHARD_OVERHEAD = 1e-5
 
 
 def _median(vals) -> float:
@@ -146,7 +152,13 @@ class DriftStat:
     ratio; ``updates`` how many flushes have been observed; ``source``
     where the pair's current rate comes from (``"default"`` /
     ``"bench"`` / ``"online"``); ``alert`` whether ``|log(ratio)|``
-    exceeds the configured ``drift_alert_ratio``."""
+    exceeds the configured ``drift_alert_ratio``.
+
+    ``mesh`` is the shard count the launches spanned: drift is
+    attributed per (pipeline, variant, mesh_size), so a mispriced
+    sharded path is visible separately from the single-device path it
+    shares rates with.  Single-device stats keep the legacy
+    ``"pipeline/variant"`` key; sharded ones append ``"@meshN"``."""
 
     pipeline: str
     variant: str
@@ -155,10 +167,12 @@ class DriftStat:
     updates: int
     source: str
     alert: bool
+    mesh: int = 1
 
     @property
     def key(self) -> str:
-        return f"{self.pipeline}/{self.variant}"
+        base = f"{self.pipeline}/{self.variant}"
+        return base if self.mesh <= 1 else f"{base}@mesh{self.mesh}"
 
 
 class _PairDrift:
@@ -199,7 +213,9 @@ class CostModel:
                  launch_overhead: float = DEFAULT_LAUNCH_OVERHEAD,
                  table: dict | None = None, *,
                  adaptive: bool | None = None, config=None,
-                 calibrated: frozenset | None = None):
+                 calibrated: frozenset | None = None,
+                 shard_overhead: float = DEFAULT_SHARD_OVERHEAD,
+                 mesh_overhead: dict | None = None):
         self.config = config if config is not None else global_config
         self.sec_per_flop = float(sec_per_flop)
         self.launch_overhead = float(launch_overhead)
@@ -211,10 +227,18 @@ class CostModel:
         #: "calibrated vs default" is visible per pair.
         self.calibrated = frozenset(calibrated if calibrated is not None
                                     else self.table)
+        #: per-extra-shard fixed cost used by :meth:`overhead` for mesh
+        #: sizes absent from the calibrated ``mesh_overhead`` table.
+        self.shard_overhead = float(shard_overhead)
+        #: ``mesh_size -> fixed overhead`` of one mesh-spanning launch,
+        #: calibrated from the sharded bench rows
+        #: (:meth:`from_bench_json`) or re-fit online per mesh size.
+        self.mesh_overhead = dict(mesh_overhead or {})
         self._drift: dict[tuple, _PairDrift] = {}
         self._rate_est: dict[tuple, RobustEstimator] = {}
         self._oh_est = self._estimator(self.launch_overhead,
                                        self.config.overhead_floor)
+        self._mesh_oh_est: dict[int, RobustEstimator] = {}
 
     def _estimator(self, initial: float, floor: float) -> RobustEstimator:
         cfg = self.config
@@ -266,6 +290,32 @@ class CostModel:
                         "defaults", path)
             return cls(**kwargs)
         table = {k: _median(v) for k, v in rates.items()}
+        # sharded rows (optional — older baselines lack them): each
+        # carries the median measured wall of mesh-spanning launches;
+        # the residual over the calibrated lane work is that mesh
+        # size's fixed overhead.
+        mesh_oh: dict[int, list[float]] = {}
+        try:
+            for rec in payload.get("sharded", ()):
+                mesh = int(rec.get("mesh", 1))
+                wall = rec.get("wall_us", 0.0)
+                flops = rec.get("model_flops", 0.0)
+                lanes = int(rec.get("lanes", 0))
+                if mesh <= 1 or wall <= 0.0 or lanes <= 0:
+                    continue
+                rate = table.get((rec["pipeline"], rec["variant"]),
+                                 DEFAULT_SEC_PER_FLOP)
+                residual = wall * 1e-6 \
+                    - math.ceil(lanes / mesh) * flops * rate
+                mesh_oh.setdefault(mesh, []).append(residual)
+        except (KeyError, TypeError, AttributeError, ValueError) as e:
+            log.warning("cost model: malformed sharded rows in %s (%s); "
+                        "ignoring them", path, e)
+            mesh_oh = {}
+        if mesh_oh and "mesh_overhead" not in kwargs:
+            floor = config.overhead_floor
+            kwargs["mesh_overhead"] = {m: max(_median(v), floor)
+                                       for m, v in mesh_oh.items()}
         return cls(table=table, **kwargs)
 
     # ---------------- pricing ----------------
@@ -279,37 +329,82 @@ class CostModel:
         return variant.model_flops(shapes) * self.rate(pipeline,
                                                        variant.name)
 
+    def overhead(self, mesh: int = 1) -> float:
+        """Fixed cost of one launch spanning ``mesh`` shards: the plain
+        ``launch_overhead`` for a single-device launch, the calibrated
+        per-mesh entry when the sharded bench rows (or the online loop)
+        have measured that mesh size, else a linear
+        ``launch_overhead + (mesh - 1) * shard_overhead`` estimate —
+        monotone in mesh size, so a sharded flush is never priced
+        cheaper than the same work on one shard plus zero."""
+        if mesh <= 1:
+            return self.launch_overhead
+        got = self.mesh_overhead.get(int(mesh))
+        if got is not None:
+            return got
+        return self.launch_overhead + (mesh - 1) * self.shard_overhead
+
     def launch_cost(self, pipeline: str, variant, shapes,
-                    lanes: int = 1) -> float:
+                    lanes: int = 1, mesh: int = 1) -> float:
         """Seconds for one grid launch ``lanes`` wide.  Padded filler
         lanes execute the same program, so callers price the full pool
         width — which is also why a coalesced rider lane is free at the
-        margin: its lane time was already paid for as filler."""
-        return self.launch_overhead + lanes * self.lane_cost(
-            pipeline, variant, shapes)
+        margin: its lane time was already paid for as filler.
+
+        ``mesh > 1`` prices a mesh-spanning sharded flush: shards run
+        their lane slabs in parallel, so the lane term divides by the
+        shard count (``ceil`` — the padded width is what each shard
+        executes) while the fixed term grows to :meth:`overhead`.
+        """
+        if mesh <= 1:
+            return self.launch_overhead + lanes * self.lane_cost(
+                pipeline, variant, shapes)
+        return self.overhead(mesh) + math.ceil(lanes / mesh) \
+            * self.lane_cost(pipeline, variant, shapes)
 
     # ---------------- the online loop ----------------
 
     def observe(self, pipeline: str, variant, shapes, lanes: int,
-                measured: float) -> None:
+                measured: float, mesh: int = 1) -> None:
         """Feed one measured launch back into the model (module
         docstring): record the pair's drift ratio, and — when adaptive —
         re-fit its ``sec_per_flop`` and the shared ``launch_overhead``
         through the robust estimators.  Non-positive / non-finite
-        measurements are ignored."""
+        measurements are ignored.
+
+        ``mesh > 1`` attributes the observation to the (pipeline,
+        variant, mesh_size) triple: drift is tracked separately per mesh
+        size, and — when adaptive — the measurement re-fits that mesh's
+        :attr:`mesh_overhead` entry (the wall-clock is parallel time, so
+        it must NOT feed the per-lane rate stream)."""
         if measured is None or not math.isfinite(measured) \
                 or measured <= 0.0:
             return
+        mesh = max(1, int(mesh))
         pair = (pipeline, variant.name)
-        predicted = self.launch_cost(pipeline, variant, shapes, lanes)
-        drift = self._drift.get(pair)
+        predicted = self.launch_cost(pipeline, variant, shapes, lanes,
+                                     mesh=mesh)
+        drift = self._drift.get((*pair, mesh))
         if drift is None:
-            drift = self._drift[pair] = _PairDrift()
+            drift = self._drift[(*pair, mesh)] = _PairDrift()
         drift.observe(predicted / measured, self.config.calibration_alpha)
         if not self.adaptive:
             return
-        flops = lanes * variant.model_flops(shapes)
         cfg = self.config
+        if mesh > 1:
+            # sharded flush: measured is the parallel makespan.  The
+            # per-shard lane work is ceil(lanes/mesh) lanes; the
+            # residual re-fits this mesh size's fixed overhead.
+            per_shard = math.ceil(lanes / mesh) \
+                * self.lane_cost(pipeline, variant, shapes)
+            est = self._mesh_oh_est.get(mesh)
+            if est is None:
+                est = self._mesh_oh_est[mesh] = self._estimator(
+                    self.overhead(mesh), cfg.overhead_floor)
+            if est.observe(measured - per_shard) and est.warmed:
+                self.mesh_overhead[mesh] = est.value
+            return
+        flops = lanes * variant.model_flops(shapes)
         # coordinate descent on the residuals: overhead sample with the
         # pair's CURRENT rate held fixed, then the rate sample with the
         # current overhead held fixed — a wrong overhead cannot poison
@@ -338,24 +433,28 @@ class CostModel:
         return "bench" if pair in self.calibrated else "default"
 
     def drift(self) -> dict[str, DriftStat]:
-        """Per-pair drift health, keyed ``"pipeline/variant"`` — every
-        pair that has been observed OR carries a calibrated rate (so
+        """Per-pair drift health, keyed ``"pipeline/variant"``
+        (single-device) or ``"pipeline/variant@meshN"`` (sharded) —
+        every (pipeline, variant, mesh) triple that has been observed,
+        plus every pair that carries a calibrated rate (so
         bench-calibrated pairs that never see traffic still report
         their source with ``updates=0``)."""
         alert_logratio = math.log(self.config.drift_alert_ratio)
         out: dict[str, DriftStat] = {}
-        for pair in sorted(set(self._drift) | self.calibrated
-                           | set(self.table)):
-            d = self._drift.get(pair)
+        keys = set(self._drift) | {(p, v, 1) for p, v in
+                                   self.calibrated | set(self.table)}
+        for pipeline, vname, mesh in sorted(keys):
+            d = self._drift.get((pipeline, vname, mesh))
             ratio = d.ratio if d is not None else math.nan
             alert = bool(ratio > 0
                          and abs(math.log(ratio)) > alert_logratio) \
                 if (d is not None and math.isfinite(ratio)) else False
-            stat = DriftStat(pipeline=pair[0], variant=pair[1],
+            stat = DriftStat(pipeline=pipeline, variant=vname,
                              ratio=ratio,
                              last=d.last if d is not None else math.nan,
                              updates=d.updates if d is not None else 0,
-                             source=self.source(*pair), alert=alert)
+                             source=self.source(pipeline, vname),
+                             alert=alert, mesh=mesh)
             out[stat.key] = stat
         return out
 
@@ -374,9 +473,12 @@ class CostModel:
 
     def calibration_updates(self) -> dict[str, int]:
         """Applied window-median update counts per estimator (the
-        ``"overhead"`` key plus one per pair) — the observability hook
-        for "is the loop actually learning?"."""
+        ``"overhead"`` key plus one per pair, plus one
+        ``"overhead@meshN"`` per observed mesh size) — the observability
+        hook for "is the loop actually learning?"."""
         out = {"overhead": self._oh_est.updates}
         for (pipeline, vname), est in sorted(self._rate_est.items()):
             out[f"{pipeline}/{vname}"] = est.updates
+        for mesh, est in sorted(self._mesh_oh_est.items()):
+            out[f"overhead@mesh{mesh}"] = est.updates
         return out

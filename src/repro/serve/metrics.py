@@ -91,6 +91,64 @@ class LaunchRecord:
     """Measured wall-clock seconds of the launch (stack + pad + execute
     + scatter), NaN when the engine did not time it — the per-launch
     truth the cost model's predictions are checked against."""
+    mesh: int = 1
+    """Shard count the launch spanned: 1 for a single-device launch,
+    N > 1 when the lane axis was shard_map'd over an N-shard mesh."""
+    shard: int = 0
+    """Shard the launch was placed on (``-1`` for mesh-spanning
+    launches, which occupy every shard)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStats:
+    """Aggregate view of one mesh shard's lane traffic.
+
+    Lane counts are floats: a mesh-spanning launch splits its lanes
+    evenly across the shards that executed it (the padded width is a
+    multiple of the shard count, so dispatched lanes divide exactly;
+    real lanes may not).  ``load`` is the accumulated priced cost
+    (cost-model seconds) the scheduler charged this shard — the
+    balancing signal :meth:`repro.serve.shard.LaneShards.pick` uses."""
+
+    shard: int
+    launches: int
+    lanes_dispatched: float
+    lanes_real: float
+    utilization: float           # real lanes / dispatched lanes
+    load: float = 0.0
+
+
+def shard_stats(launches, n_shards: int,
+                load=None) -> tuple[dict, float]:
+    """Fold launch records into per-shard stats + the imbalance ratio
+    (max/mean dispatched lanes; NaN before any lanes).  A spanning
+    launch (``mesh > 1``) counts on every shard it occupied; a placed
+    launch on its ``shard`` alone."""
+    lanes = [0.0] * n_shards
+    real = [0.0] * n_shards
+    count = [0] * n_shards
+    for rec in launches:
+        width = rec.real + rec.padded
+        if rec.mesh > 1:
+            for s in range(n_shards):
+                lanes[s] += width / rec.mesh
+                real[s] += rec.real / rec.mesh
+                count[s] += 1
+        elif 0 <= rec.shard < n_shards:
+            lanes[rec.shard] += width
+            real[rec.shard] += rec.real
+            count[rec.shard] += 1
+    total = sum(lanes)
+    imbalance = (max(lanes) / (total / n_shards)) if total > 0 \
+        else math.nan
+    stats = {
+        s: ShardStats(
+            shard=s, launches=count[s],
+            lanes_dispatched=lanes[s], lanes_real=real[s],
+            utilization=(real[s] / lanes[s]) if lanes[s] else 0.0,
+            load=(load[s] if load is not None else 0.0))
+        for s in range(n_shards)}
+    return stats, imbalance
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +216,16 @@ class MetricsSnapshot:
     calibration_updates: dict = dataclasses.field(default_factory=dict)
     """Applied window-median update counts per estimator (``"overhead"``
     plus one ``"pipeline/variant"`` key per re-fit rate)."""
+    shards: dict = dataclasses.field(default_factory=dict)
+    """``shard index -> ShardStats`` for mesh-sharded muxes (empty on
+    the single-device path).  Attached by ``SolverMux.metrics()`` —
+    like ``drift``, the Recorder itself never sees the mesh."""
+    shard_imbalance: float = math.nan
+    """max/mean dispatched lanes across shards (1.0 = balanced; NaN
+    when unsharded or before any launch)."""
+    shard_imbalance_alert: bool = False
+    """True when ``shard_imbalance`` exceeds the configured
+    ``imbalance_alert`` ratio — the skew observability hook."""
 
     def __getitem__(self, pipeline: str) -> PipelineStats:
         return self.pipelines[pipeline]
@@ -180,10 +248,12 @@ class Recorder:
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, t: float, variant: str = "base",
                       coalesced: int = 0,
-                      measured: float = math.nan) -> None:
+                      measured: float = math.nan,
+                      mesh: int = 1, shard: int = 0) -> None:
         self._launches.append(
             LaunchRecord(pipeline, shape, int(real), int(padded), t,
-                         variant, int(coalesced), float(measured)))
+                         variant, int(coalesced), float(measured),
+                         int(mesh), int(shard)))
 
     def record_job(self, pipeline: str, submitted_at: float,
                    finished_at: float,

@@ -74,8 +74,46 @@ tiled bucket prices at its variant's real cost.  The rules:
 
 Every policy decision appends a JSON-able record to ``mux.events``
 (``flush`` / ``drop`` / ``preempt`` / ``defer`` / ``coalesce`` /
-``coalesce_reject`` / ``readmit``) — the audit trail golden-trace
-tests replay.
+``coalesce_reject`` / ``readmit``; plus ``shard_split`` /
+``shard_reject`` on a mesh) — the audit trail golden-trace tests
+replay.
+
+Mesh-sharded lane pools
+-----------------------
+
+With ``mesh_size > 1`` (constructor argument, default from
+``REPRO_SERVE_MESH_SIZE``) the mux spans a 1-D device mesh
+(:class:`repro.serve.shard.LaneShards`): aggregate capacity is
+``lanes * mesh_size`` and every scheduling rule above generalizes
+per-shard —
+
+  * **placement** — non-spanning launches are committed to the shard
+    with the most remaining per-poll budget (then least accumulated
+    load; deterministic index tiebreak), so flushes land on the
+    least-loaded shard group.
+  * **hot-bucket splitting (cross-shard work stealing)** — a bucket
+    whose backlog reaches ``shard_split_pressure * lanes`` is offered
+    as mesh-spanning flushes: one ``shard_map`` launch whose lane axis
+    splits over the mesh's data axis (per-shard lane slabs, outputs
+    gathered back), padded per shard so no shard sees a partial
+    remainder.  The split is priced through the same cost model as
+    everything else — ``overhead(mesh) + ceil(lanes/mesh) * lane_cost``
+    vs the serial per-shard launches it replaces — and taken only when
+    ``sharded_cost * steal_ratio < local_cost``, so stealing never
+    beats a cheaper local partial (``shard_split`` / ``shard_reject``
+    events record both prices).
+  * **per-shard admission** — the policy budget becomes one budget per
+    shard; a spanning flush must fit every shard's budget, a local
+    flush only its placed shard's.  Preemption frees per-shard budget;
+    coalescing refunds flow back per-shard.
+  * **observability** — :meth:`SolverMux.metrics` adds per-shard
+    utilization (:class:`repro.serve.metrics.ShardStats`) and the
+    max/mean lane-load imbalance ratio, flagged against
+    ``imbalance_alert``.
+
+``mesh_size=1`` (the default) constructs no mesh at all: the mux is
+bit-for-bit the single-device scheduler above — same launches, same
+events, same metrics.
 
 API sketch::
 
@@ -101,6 +139,8 @@ import numpy as np
 from repro.serve.config import global_config
 from repro.serve.core import EngineCore, pad_group
 from repro.serve.cost import CostModel
+from repro.serve.metrics import shard_stats
+from repro.serve.shard import LaneShards
 from repro.serve.solver import (SolveJob, VariantDispatcher,
                                 resolve_pipeline_spec)
 from repro.serve.tuning import BucketTuner
@@ -169,6 +209,8 @@ class _Candidate:
     deadline: float
     seq: int
     riders: tuple = ()
+    mesh: int = 1                   # > 1: mesh-spanning sharded flush
+    shard: int | None = None        # admission-placed shard (mesh == 1)
 
 
 class _LanePool:
@@ -179,9 +221,10 @@ class _LanePool:
     from the fast variant.  ``age`` counts consecutive defer/preempt
     push-backs per bucket (the policy's starvation counter)."""
 
-    def __init__(self, spec, options: dict, cost_model=None):
+    def __init__(self, spec, options: dict, cost_model=None, shards=None):
         self.spec = spec
-        self.dispatcher = VariantDispatcher(spec, options, cost_model)
+        self.dispatcher = VariantDispatcher(spec, options, cost_model,
+                                            shards)
         self.buckets: dict[tuple, list[SolveJob]] = {}
         self.age: dict[tuple, int] = {}
 
@@ -234,6 +277,13 @@ class SolverMux(EngineCore):
                 (observed-traffic per-bucket ``max_wait`` + per-pool
                 pressure); ``None`` defers to
                 ``REPRO_SERVE_ADAPT_THRESHOLDS``
+      mesh_size lane-shard count (``None`` defers to
+                ``REPRO_SERVE_MESH_SIZE``, default 1).  > 1 spans the
+                pools over the first ``mesh_size`` local devices —
+                aggregate capacity ``lanes * mesh_size``, per-shard
+                placement/budgets, hot-bucket splitting (see the module
+                docstring); 1 builds no mesh and is bit-identical to
+                the single-device scheduler
 
     Every launch is measured (``wall``) and fed back through
     :meth:`observe_launch` to whichever cost model is attached — the
@@ -246,6 +296,7 @@ class SolverMux(EngineCore):
                  policy: OverloadPolicy | None = None,
                  cost_model: CostModel | None = None,
                  adapt: bool | None = None,
+                 mesh_size: int | None = None,
                  options: dict[str, dict] | None = None):
         super().__init__(lanes, clock=clock, wall=wall)
         if policy is not None and cost_model is not None:
@@ -259,10 +310,28 @@ class SolverMux(EngineCore):
             adapt = global_config.adapt_thresholds
         self.tuner = BucketTuner(lanes, cost_model=self.cost_model) \
             if adapt else None
+        if mesh_size is None:
+            mesh_size = global_config.mesh_size
+        if mesh_size < 1:
+            raise ValueError(f"mesh_size must be >= 1, got {mesh_size}")
+        self.mesh_size = int(mesh_size)
+        # shards stay None at mesh_size=1: every sharded branch below is
+        # guarded on them, so the single-device scheduler is untouched
+        self.shards = LaneShards.build(self.mesh_size) \
+            if self.mesh_size > 1 else None
+        self._shard_split_pressure = global_config.shard_split_pressure
+        self._steal_ratio = global_config.steal_ratio
+        self._imbalance_alert = global_config.imbalance_alert
         self._options = dict(options or {})
         self._pools: dict[str, _LanePool] = {}
         self._seq = 0
         self.events: list[dict] = []
+
+    @property
+    def total_lanes(self) -> int:
+        """Aggregate lane-pool capacity: ``lanes`` per shard across the
+        mesh (``lanes`` itself on a single device)."""
+        return self.lanes * (self.shards.size if self.shards else 1)
 
     @property
     def cost_model(self) -> CostModel | None:
@@ -280,7 +349,7 @@ class SolverMux(EngineCore):
         if pool is None:
             spec = resolve_pipeline_spec(pipeline)
             pool = _LanePool(spec, self._options.get(pipeline, {}),
-                             self.cost_model)
+                             self.cost_model, self.shards)
             self._pools[pipeline] = pool
         return pool
 
@@ -312,17 +381,19 @@ class SolverMux(EngineCore):
         return job
 
     def observe_launch(self, spec, variant, key: tuple, lanes: int,
-                       measured: float) -> None:
+                       measured: float, mesh: int = 1) -> None:
         """Close the calibration loop: every measured launch feeds the
         attached cost model (drift tracking always; rate/overhead
         re-fitting when the model is adaptive) and the threshold tuner
-        when one is enabled."""
+        when one is enabled.  ``mesh > 1`` marks a mesh-spanning launch
+        so drift/overhead attribution stays per (pipeline, variant,
+        mesh_size)."""
         cm = self.cost_model
         if cm is not None:
             shapes = tuple(shape for shape, _ in key)
             cm.observe(spec.name,
                        variant if variant is not None else spec.base,
-                       shapes, lanes, measured)
+                       shapes, lanes, measured, mesh=mesh)
         if self.tuner is not None:
             self.tuner.note_launch(spec.name, lanes, measured)
 
@@ -337,6 +408,13 @@ class SolverMux(EngineCore):
             snap = dataclasses.replace(
                 snap, drift=cm.drift(), worst_drift=cm.worst_drift(),
                 calibration_updates=cm.calibration_updates())
+        if self.shards is not None:
+            shards, imb = shard_stats(snap.launches, self.shards.size,
+                                      self.shards.load)
+            snap = dataclasses.replace(
+                snap, shards=shards, shard_imbalance=imb,
+                shard_imbalance_alert=(not math.isnan(imb)
+                                       and imb >= self._imbalance_alert))
         return snap
 
     def pending(self) -> int:
@@ -360,13 +438,32 @@ class SolverMux(EngineCore):
         return items
 
     def _launch(self, pool: _LanePool, key: tuple, chunk: list,
-                riders: tuple = (), now: float | None = None) -> list:
+                riders: tuple = (), now: float | None = None,
+                mesh: int = 1, shard: int | None = None) -> list:
         """One grid launch: ``chunk`` jobs of the (pool, key) bucket plus
         optional cross-shape ``riders`` embedded into otherwise-padded
         lanes.  Records the launch + per-job latencies and logs a
-        ``flush`` event."""
+        ``flush`` event.
+
+        On a mesh, ``mesh > 1`` runs the shard_map-wrapped spanning form
+        (lane axis split over the mesh, padded to ``lanes * mesh`` so
+        every shard gets a whole slab); ``mesh == 1`` places the launch
+        on ``shard`` (least-loaded when unspecified), committing inputs
+        to that shard's device.  Without a mesh both default to the
+        legacy single-device path."""
         spec = pool.spec
-        variant, fn = pool.dispatcher.resolve(key)
+        device = None
+        if mesh > 1:
+            variant, fn = pool.dispatcher.resolve_sharded(key)
+            rec_shard = -1
+        else:
+            variant, fn = pool.dispatcher.resolve(key)
+            if self.shards is not None:
+                if shard is None:
+                    shard = self.shards.pick()
+                device = self.shards.devices[shard]
+            rec_shard = shard if shard is not None else 0
+        width = self.lanes * max(1, mesh)
         if riders:
             big_shapes = tuple(shape for shape, _ in key)
             embedded = [spec.coalesce.embed(j.args, big_shapes)
@@ -382,14 +479,21 @@ class SolverMux(EngineCore):
             stacked = [np.stack([np.asarray(j.args[i]) for j in chunk]
                                 + [np.asarray(e[i]) for e in embedded])
                        for i in range(len(key))]
-            padded, pad = pad_group(spec, stacked, self.lanes,
+            padded, pad = pad_group(spec, stacked, width,
                                     variant=variant)
-            res, measured = self._timed_call(fn, padded)
+            res, measured = self._timed_call(fn, padded, device=device)
             self.record_launch(spec.name, key, len(chunk) + len(riders),
                                pad, variant.name, coalesced=len(riders),
-                               measured=measured)
-            self.observe_launch(spec, variant, key,
-                                len(chunk) + len(riders) + pad, measured)
+                               measured=measured, mesh=mesh,
+                               shard=rec_shard)
+            if mesh > 1:
+                self.observe_launch(spec, variant, key,
+                                    len(chunk) + len(riders) + pad,
+                                    measured, mesh=mesh)
+            else:
+                self.observe_launch(spec, variant, key,
+                                    len(chunk) + len(riders) + pad,
+                                    measured)
             done = []
             for i, job in enumerate(chunk):
                 job.out = res[i]
@@ -405,21 +509,45 @@ class SolverMux(EngineCore):
                 done.append(job)
         else:
             done = self.dispatch_group(spec, fn, key, list(chunk),
-                                       variant=variant)
-        self._event("flush", t=self.clock() if now is None else now,
-                    pipeline=spec.name, variant=variant.name,
-                    shape=_shape_label(key),
-                    jobs=[j.seq for j in chunk],
-                    coalesced=[j.seq for j in riders])
+                                       variant=variant, mesh=mesh,
+                                       shard=rec_shard, device=device)
+        if self.shards is not None:
+            cost = pool.dispatcher.price(key, width, mesh=mesh)
+            if mesh > 1:
+                self.shards.note_all(cost)
+            else:
+                self.shards.note(shard, cost)
+            # mesh/shard fields only appear on sharded muxes, so the
+            # single-device event stream (golden traces) is unchanged
+            self._event("flush", t=self.clock() if now is None else now,
+                        pipeline=spec.name, variant=variant.name,
+                        shape=_shape_label(key),
+                        jobs=[j.seq for j in chunk],
+                        coalesced=[j.seq for j in riders],
+                        mesh=mesh, shard=rec_shard)
+        else:
+            self._event("flush", t=self.clock() if now is None else now,
+                        pipeline=spec.name, variant=variant.name,
+                        shape=_shape_label(key),
+                        jobs=[j.seq for j in chunk],
+                        coalesced=[j.seq for j in riders])
         return done
 
     def _flush_bucket(self, pool: _LanePool, key: tuple, *,
                       full_only: bool,
                       now: float | None = None) -> list[SolveJob]:
         """Dispatch a bucket in lane-group chunks.  ``full_only`` leaves
-        the trailing partial chunk queued (continuous-batching path)."""
+        the trailing partial chunk queued (continuous-batching path).
+        On a mesh, a backlog of at least ``lanes * mesh_size`` drains in
+        mesh-spanning launches first; the remainder goes per-shard."""
         jobs = pool.buckets[key]
         done: list[SolveJob] = []
+        if self.shards is not None:
+            total = self.lanes * self.shards.size
+            while len(jobs) >= total:
+                chunk, jobs = jobs[:total], jobs[total:]
+                done.extend(self._launch(pool, key, chunk, now=now,
+                                         mesh=self.shards.size))
         while len(jobs) >= self.lanes:
             chunk, jobs = jobs[:self.lanes], jobs[self.lanes:]
             done.extend(self._launch(pool, key, chunk, now=now))
@@ -525,12 +653,27 @@ class SolverMux(EngineCore):
                     del pool.buckets[key]
                     pool.age.pop(key, None)
 
+    def _split_threshold(self) -> int:
+        """Backlog (jobs in one bucket) at which a bucket counts as hot
+        and is offered as mesh-spanning flushes: at least one full lane
+        group plus one, scaled by ``shard_split_pressure``."""
+        return max(self.lanes + 1,
+                   int(round(self.lanes * self._shard_split_pressure)))
+
     def _candidates(self, now: float) -> list[_Candidate]:
         """Launch candidates this round: every full lane-group chunk,
         plus each due partial chunk (expired deadline / max_wait age /
         per-pool pressure / starvation-aged).  Priced at full pool width
         — padded lanes execute too — and sorted aged-first, then by
-        (deadline, arrival)."""
+        (deadline, arrival).
+
+        On a mesh, a hot bucket (backlog >= the split threshold) is
+        first carved into mesh-spanning chunks of up to ``lanes * mesh``
+        jobs — cross-shard work stealing — but only while the sharded
+        price (times ``steal_ratio``) beats the serial per-shard
+        launches it replaces, so stealing never wins over a cheaper
+        local partial; the remainder falls through to the per-shard
+        chunking below."""
         pol = self.policy
         cands: list[_Candidate] = []
         for pool in self._pools.values():
@@ -541,6 +684,35 @@ class SolverMux(EngineCore):
                 price = pool.dispatcher.price(key, self.lanes)
                 aged = pool.age.get(key, 0) >= pol.max_defer
                 rest = jobs
+                if self.shards is not None \
+                        and len(rest) >= self._split_threshold():
+                    total = self.lanes * self.shards.size
+                    sh_price = pool.dispatcher.price(
+                        key, total, mesh=self.shards.size)
+                    while len(rest) >= self._split_threshold():
+                        k = min(len(rest), total)
+                        local = math.ceil(k / self.lanes) * price
+                        if sh_price * self._steal_ratio >= local:
+                            self._event(
+                                "shard_reject", t=now,
+                                pipeline=pool.spec.name,
+                                shape=_shape_label(key), considered=k,
+                                sharded_cost=_round(sh_price),
+                                local_cost=_round(local))
+                            break
+                        chunk, rest = rest[:k], rest[k:]
+                        cand = self._mk_cand(pool, key, chunk, k < total,
+                                             aged, sh_price)
+                        cand.mesh = self.shards.size
+                        cands.append(cand)
+                        self._event(
+                            "shard_split", t=now,
+                            pipeline=pool.spec.name,
+                            shape=_shape_label(key),
+                            jobs=[j.seq for j in chunk],
+                            mesh=self.shards.size,
+                            sharded_cost=_round(sh_price),
+                            local_cost=_round(local))
                 while len(rest) >= self.lanes:
                     chunk, rest = rest[:self.lanes], rest[self.lanes:]
                     cands.append(self._mk_cand(pool, key, chunk, False,
@@ -573,12 +745,52 @@ class SolverMux(EngineCore):
         past the budget (the voucher drives the remaining budget
         negative, blocking this poll's later candidates; each poll
         starts afresh from ``policy.budget``) — bounded, so a backlog
-        of aged buckets can never avalanche past admission control."""
+        of aged buckets can never avalanche past admission control.
+
+        On a mesh the budget generalizes to one ``policy.budget`` per
+        shard: a local candidate is placed on (and charged to) the shard
+        with the most remaining budget, then least load; a mesh-spanning
+        candidate must fit EVERY shard's budget and is charged to all of
+        them.  Preempted launches refund the shard(s) they were charged
+        to.  With one shard this reduces exactly to the scalar logic
+        above."""
         pol = self.policy
-        budget = math.inf if pol.budget is None else pol.budget
+        n = 1 if self.shards is None else self.shards.size
+        base = math.inf if pol.budget is None else pol.budget
+        budgets = [base] * n
         admitted: list[_Candidate] = []
         voucher = True
         bumped: set[tuple] = set()
+
+        def best(cand, extra=None):
+            """Placement shard for a local candidate: most remaining
+            budget (+ any budget a preemption plan would free), least
+            load, lowest index."""
+            if self.shards is None:
+                return 0
+            avail = budgets if extra is None else \
+                [b + e for b, e in zip(budgets, extra)]
+            return self.shards.pick(avail)
+
+        def fits(cand, extra=None):
+            avail = budgets if extra is None else \
+                [b + e for b, e in zip(budgets, extra)]
+            if cand.mesh > 1:
+                return min(avail) >= cand.price
+            return avail[best(cand, extra)] >= cand.price
+
+        def charge(cand, sign=-1.0):
+            if cand.mesh > 1:
+                for s in range(n):
+                    budgets[s] += sign * cand.price
+            else:
+                budgets[cand.shard or 0] += sign * cand.price
+
+        def place(cand):
+            if cand.mesh <= 1 and self.shards is not None:
+                cand.shard = best(cand)
+            charge(cand)
+            admitted.append(cand)
 
         def bump(cand):
             pool = cand.pool
@@ -588,27 +800,32 @@ class SolverMux(EngineCore):
             pool.age[cand.key] = pool.age.get(cand.key, 0) + 1
 
         for cand in cands:
-            if cand.price <= budget or (cand.aged and voucher):
-                if cand.price > budget:
+            ok = fits(cand)
+            if ok or (cand.aged and voucher):
+                if not ok:
                     voucher = False
-                admitted.append(cand)
-                budget -= cand.price
+                place(cand)
                 continue
             if cand.hard and pol.preempt:
                 victims = sorted(
                     (a for a in admitted if not a.hard and not a.aged),
                     key=lambda a: (a.price, not a.partial, len(a.jobs)))
-                plan, freed = [], 0.0
-                need = cand.price - budget
+                plan: list[_Candidate] = []
+                freed = [0.0] * n
                 for v in victims:
-                    if freed >= need:
+                    if fits(cand, freed):
                         break
                     plan.append(v)
-                    freed += v.price
-                if plan and freed >= need:
+                    if v.mesh > 1:
+                        for s in range(n):
+                            freed[s] += v.price
+                    else:
+                        freed[v.shard or 0] += v.price
+                if plan and fits(cand, freed):
                     for v in plan:
                         admitted.remove(v)
                         bump(v)
+                        charge(v, sign=1.0)
                         self.recorder.record_preempt(
                             v.pool.spec.name, len(v.jobs), now)
                         self._event(
@@ -619,15 +836,15 @@ class SolverMux(EngineCore):
                             cost=_round(v.price),
                             for_pipeline=cand.pool.spec.name,
                             for_cost=_round(cand.price))
-                    budget += freed - cand.price
-                    admitted.append(cand)
+                    place(cand)
                     continue
             bump(cand)
+            left = min(budgets) if cand.mesh > 1 else budgets[best(cand)]
             self._event("defer", t=now, pipeline=cand.pool.spec.name,
                         shape=_shape_label(cand.key),
                         jobs=[j.seq for j in cand.jobs],
                         price=_round(cand.price),
-                        budget=_round(budget))
+                        budget=_round(left))
         return admitted
 
     def _ride_score(self, cand: _Candidate, dkey: tuple, k: int,
@@ -647,7 +864,7 @@ class SolverMux(EngineCore):
         return ride, own
 
     def _plan_riders(self, admitted: list[_Candidate],
-                     now: float) -> tuple[list[_Candidate], float]:
+                     now: float) -> tuple[list[_Candidate], list[float]]:
         """Cross-shape coalescing: fill admitted partial launches' free
         lanes with compatible smaller jobs from the same pool instead of
         filler.  Two donor sources, in order: (1) a whole *admitted*
@@ -661,15 +878,19 @@ class SolverMux(EngineCore):
         ``_launch`` verifies every embedded lane conforms to them) and
         scored by the cost model: ride iff the padded-lane work is
         cheaper than the launch it avoids.  Returns the admitted list
-        with absorbed launches removed, plus the refunded budget."""
+        with absorbed launches removed, plus the refunded budget
+        (per-shard list; one entry on a single device).  Mesh-spanning
+        launches are never absorbed as donors — their budget was
+        charged to every shard — but a spanning partial can host
+        riders in its padded lanes like any other partial."""
         pol = self.policy
         taken = {id(j) for c in admitted for j in c.jobs}
         absorbed: set[int] = set()
-        refund = 0.0
+        refund = [0.0] * (1 if self.shards is None else self.shards.size)
         for cand in admitted:
             if not cand.partial or id(cand) in absorbed:
                 continue
-            free = self.lanes - len(cand.jobs)
+            free = self.lanes * max(1, cand.mesh) - len(cand.jobs)
             if free <= 0:
                 continue
             pool, spec = cand.pool, cand.pool.spec
@@ -682,6 +903,7 @@ class SolverMux(EngineCore):
                     break
                 if (donor is cand or id(donor) in absorbed
                         or not donor.partial or donor.riders
+                        or donor.mesh > 1
                         or donor.pool is not pool
                         or len(donor.jobs) > free
                         or not spec.coalesce.compatible(donor.key,
@@ -700,7 +922,7 @@ class SolverMux(EngineCore):
                 cand.riders += tuple(donor.jobs)
                 free -= k
                 absorbed.add(id(donor))
-                refund += donor.price
+                refund[donor.shard or 0] += donor.price
                 self._event("coalesce", t=now, pipeline=spec.name,
                             from_shape=_shape_label(donor.key),
                             into_shape=_shape_label(cand.key),
@@ -743,12 +965,14 @@ class SolverMux(EngineCore):
         return [c for c in admitted if id(c) not in absorbed], refund
 
     def _readmit(self, cands: list[_Candidate],
-                 admitted: list[_Candidate], refund: float,
+                 admitted: list[_Candidate], refund: list[float],
                  now: float) -> list[_Candidate]:
         """Budget refunded by absorbed launches flows back to this
         round's deferred candidates, in the original priority order —
         without this, a poll that saved a launch by coalescing would
-        still under-admit by that launch's cost."""
+        still under-admit by that launch's cost.  Refunds are per-shard
+        (a local candidate re-admits against the richest shard's refund
+        and is placed there; a spanning one needs every shard's)."""
         have = {id(c) for c in admitted}
         extra: list[_Candidate] = []
         for cand in cands:
@@ -758,14 +982,25 @@ class SolverMux(EngineCore):
                      for j in (*c.jobs, *c.riders)}
             if any(id(j) in taken for j in cand.jobs):
                 continue            # its jobs already ride elsewhere
-            if cand.price <= refund:
-                refund -= cand.price
-                extra.append(cand)
-                self._event("readmit", t=now,
-                            pipeline=cand.pool.spec.name,
-                            shape=_shape_label(cand.key),
-                            jobs=[j.seq for j in cand.jobs],
-                            price=_round(cand.price))
+            if cand.mesh > 1:
+                if cand.price > min(refund):
+                    continue
+                for s in range(len(refund)):
+                    refund[s] -= cand.price
+            else:
+                s = self.shards.pick(refund) \
+                    if self.shards is not None else 0
+                if cand.price > refund[s]:
+                    continue
+                refund[s] -= cand.price
+                if self.shards is not None:
+                    cand.shard = s
+            extra.append(cand)
+            self._event("readmit", t=now,
+                        pipeline=cand.pool.spec.name,
+                        shape=_shape_label(cand.key),
+                        jobs=[j.seq for j in cand.jobs],
+                        price=_round(cand.price))
         return extra
 
     def _poll_policy(self, now: float) -> list[SolveJob]:
@@ -780,7 +1015,7 @@ class SolverMux(EngineCore):
         admitted = self._admit(cands, now)
         if pol.coalesce:
             admitted, refund = self._plan_riders(admitted, now)
-            if refund > 0.0:
+            if any(r > 0.0 for r in refund):
                 admitted.extend(self._readmit(cands, admitted, refund,
                                               now))
         done: list[SolveJob] = []
@@ -791,7 +1026,8 @@ class SolverMux(EngineCore):
             # nonconforming coalesce embedding) must leave its jobs
             # queued, exactly like the legacy flush path
             served = self._launch(pool, cand.key, cand.jobs,
-                                  riders=cand.riders, now=now)
+                                  riders=cand.riders, now=now,
+                                  mesh=cand.mesh, shard=cand.shard)
             pool.remove(cand.key, cand.jobs)
             by_key: dict[tuple, list] = {}
             for rider in cand.riders:

@@ -1,0 +1,99 @@
+"""Mesh-sharded lane pools: :class:`LaneShards`.
+
+The paper's lane dimension is batch-parallel — every pipeline grid
+declares it ``("parallel", ...)`` — so a flush's lane axis shards
+trivially across a 1-D device mesh: each device executes its own slab
+of lanes in lockstep and the outputs gather back.  ``LaneShards`` is
+the serve-side handle on that mesh:
+
+  * **wrapping** — :meth:`wrap` turns a pipeline entry point into its
+    mesh-spanning form via the version-portable
+    :func:`repro.distributed.sharding.shard_map` shim (``P(axis)`` on
+    the batch dim of every input and output; trailing dims replicated).
+    Because lanes are independent, the sharded program is bit-identical
+    to the single-device launch on the same batch — the property the
+    sharded-serve tests pin.
+  * **placement** — non-spanning launches are committed to one shard's
+    device (:attr:`devices`); :meth:`pick` chooses the least-loaded
+    shard (optionally budget-first, for the mux's per-shard admission).
+  * **load accounting** — :meth:`note` / :meth:`note_all` accumulate
+    priced launch cost per shard; :meth:`imbalance` is the max/mean
+    skew the metrics snapshot reports.
+
+A ``LaneShards`` over a 1-device mesh is legal but pointless — the mux
+only constructs one for ``mesh_size > 1`` so the single-device path
+stays exactly the code it always was.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import shard_map
+
+
+class LaneShards:
+    """One 1-D lane mesh + per-shard load accounting for a SolverMux."""
+
+    def __init__(self, mesh, axis: str = "data"):
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no {axis!r} axis: "
+                             f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = axis
+        self.devices = tuple(np.ravel(mesh.devices))
+        self.size = len(self.devices)
+        self.load = [0.0] * self.size
+
+    @classmethod
+    def build(cls, size: int, axis: str = "data") -> "LaneShards":
+        """Construct over the first ``size`` local devices (on CPU this
+        needs virtual devices — :mod:`repro.launch.xla_env`)."""
+        from repro.launch.mesh import make_lane_mesh
+        return cls(make_lane_mesh(size, axis=axis), axis=axis)
+
+    # ---------------- sharded launch path ----------------
+
+    def wrap(self, fn, nargs: int):
+        """Mesh-spanning form of a pipeline entry point: batch dim 0 of
+        all ``nargs`` inputs and of the output is split over the lane
+        axis; each shard sees its own contiguous lane slab.  The caller
+        is responsible for padding the batch to a multiple of
+        ``size * lanes_per_device`` so no shard sees a partial
+        remainder (``EngineCore.dispatch_group`` pads to the full
+        ``lanes * mesh`` width)."""
+        spec = P(self.axis)
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=(spec,) * nargs, out_specs=spec)
+
+    # ---------------- placement / balancing ----------------
+
+    def pick(self, budgets: list[float] | None = None) -> int:
+        """Shard for the next non-spanning launch: most remaining
+        budget first (when per-shard budgets are in play), least
+        accumulated load second, lowest index last — deterministic, so
+        replayed traces place identically."""
+        if budgets is None:
+            return max(range(self.size),
+                       key=lambda s: (-self.load[s], -s))
+        return max(range(self.size),
+                   key=lambda s: (budgets[s], -self.load[s], -s))
+
+    def note(self, shard: int, cost: float) -> None:
+        self.load[shard] += cost
+
+    def note_all(self, cost: float) -> None:
+        """A mesh-spanning launch occupies every shard for its
+        duration."""
+        for s in range(self.size):
+            self.load[s] += cost
+
+    def imbalance(self) -> float:
+        """max/mean accumulated load across shards (1.0 = perfectly
+        balanced; NaN before any launch)."""
+        total = sum(self.load)
+        if total <= 0.0:
+            return math.nan
+        return max(self.load) / (total / self.size)

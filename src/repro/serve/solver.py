@@ -85,13 +85,22 @@ class VariantDispatcher:
     priced: :meth:`price` resolves the bucket's variant and returns the
     estimated launch cost, so admission / preemption / coalescing
     decisions all price through the same dispatch the launch will use.
+
+    ``shards`` (a :class:`repro.serve.shard.LaneShards`, optional) adds
+    the mesh-spanning resolution path: :meth:`resolve_sharded` wraps the
+    same options-bound variant entry point in ``shard_map`` over the
+    lane mesh, cached per (variant, arity) alongside the single-device
+    cache.
     """
 
-    def __init__(self, spec, options: dict | None = None, cost_model=None):
+    def __init__(self, spec, options: dict | None = None, cost_model=None,
+                 shards=None):
         self.spec = spec
         self.options = dict(options or {})
         self.cost_model = cost_model
+        self.shards = shards
         self._fns: dict[str, object] = {}
+        self._sharded_fns: dict[tuple, object] = {}
 
     def resolve(self, key: tuple):
         """``key`` is a SolveJob.shape_key(): per-arg ((shape, dtype)).
@@ -106,17 +115,38 @@ class VariantDispatcher:
             self._fns[variant.name] = fn
         return variant, fn
 
-    def price(self, key: tuple, lanes: int = 1) -> float:
+    def resolve_sharded(self, key: tuple):
+        """Mesh-spanning counterpart of :meth:`resolve`: the same
+        dispatched variant, wrapped over the lane mesh so the batch dim
+        splits across shards.  Requires ``shards``."""
+        if self.shards is None:
+            raise ValueError(
+                f"{self.spec.name!r} dispatcher has no lane shards; "
+                "sharded resolution needs a mesh")
+        shapes = tuple(shape for shape, _ in key)
+        dtypes = tuple(np.dtype(dt) for _, dt in key)
+        variant = self.spec.dispatch_key(shapes, dtypes)
+        cache_key = (variant.name, len(key))
+        fn = self._sharded_fns.get(cache_key)
+        if fn is None:
+            fn = jax.jit(self.shards.wrap(
+                functools.partial(variant.fn, **self.options), len(key)))
+            self._sharded_fns[cache_key] = fn
+        return variant, fn
+
+    def price(self, key: tuple, lanes: int = 1, mesh: int = 1) -> float:
         """Estimated launch cost (cost-model seconds) of flushing one
         ``lanes``-wide grid of this shape bucket through whichever
-        variant :meth:`resolve` dispatches it to."""
+        variant :meth:`resolve` dispatches it to.  ``mesh > 1`` prices
+        the mesh-spanning form of the same flush (lanes split across
+        shards, per-mesh launch overhead)."""
         if self.cost_model is None:
             from repro.serve.cost import CostModel
             self.cost_model = CostModel()
         variant, _ = self.resolve(key)
         shapes = tuple(shape for shape, _ in key)
         return self.cost_model.launch_cost(self.spec.name, variant,
-                                           shapes, lanes)
+                                           shapes, lanes, mesh=mesh)
 
 
 class PipelineEngine(FifoEngineCore):
@@ -142,7 +172,8 @@ class PipelineEngine(FifoEngineCore):
         job.pipeline = self.spec.name
         return super().submit(job)
 
-    def observe_launch(self, spec, variant, key, lanes, measured):
+    def observe_launch(self, spec, variant, key, lanes, measured,
+                       mesh: int = 1):
         """Feed measured launch wall-clock to the dispatcher's cost
         model when one is attached (set ``engine._dispatcher.cost_model``
         or pass one to the dispatcher) — same calibration loop as the
@@ -152,7 +183,7 @@ class PipelineEngine(FifoEngineCore):
             shapes = tuple(shape for shape, _ in key)
             cm.observe(spec.name,
                        variant if variant is not None else spec.base,
-                       shapes, lanes, measured)
+                       shapes, lanes, measured, mesh=mesh)
 
     def run(self) -> list[SolveJob]:
         done: list[SolveJob] = []

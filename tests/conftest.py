@@ -1,9 +1,21 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
-tests and benches must see the single real CPU device; only
-repro.launch.dryrun (run as a subprocess) uses 512 placeholder devices."""
+"""Shared fixtures + session-wide XLA device environment.
+
+The whole suite runs on 8 virtual CPU devices
+(``--xla_force_host_platform_device_count=8``, merged into any existing
+``XLA_FLAGS`` before the first jax import) so mesh/sharding tests —
+distributed collectives, the mesh-sharded SolverMux — exercise real
+multi-device programs.  Single-device tests are unaffected: jax still
+places unsharded work on device 0.  An explicit device count already in
+``XLA_FLAGS`` is respected, not clobbered (``repro.launch.xla_env``);
+only repro.launch.dryrun (run as a subprocess) uses 512 placeholder
+devices."""
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.launch.xla_env import force_host_device_count
+
+force_host_device_count(8)
 
 import numpy as np
 import pytest

@@ -1,0 +1,277 @@
+"""Mesh-sharded SolverMux (multi-device lane pools).
+
+Pins the properties the mesh path promises:
+
+  * ``mesh_size=1`` is bit-for-bit the single-device scheduler — same
+    events, same outputs (the golden-trace replay in test_overload pins
+    the event stream against the committed file; here we pin explicit
+    mesh_size=1 against the default construction).
+  * a mesh-spanning ``shard_map`` launch returns bit-identical results
+    to the plain jit'd launch on the same batch (lanes are independent),
+    so serving the same traffic at mesh > 1 yields numerically equal
+    job outputs.
+  * hot buckets split across shards only when the cost model says the
+    sharded flush beats the serial local launches (``steal_ratio``
+    gate), flushes place on the least-loaded shard, and the metrics
+    snapshot reports per-shard utilization + imbalance.
+  * the sharded overload replay scales: mesh=4 aggregate throughput at
+    least 3x mesh=1 on the committed deterministic trace (the
+    acceptance floor check_bench_json also gates in CI).
+
+The suite session forces 8 virtual CPU devices (conftest), so every
+mesh size swept here exists.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro import pipelines as pp
+from repro.launch.serve_solvers import (OVERLOAD_TICK, job_args,
+                                        overload_trace,
+                                        run_sharded_overload)
+from repro.serve import (CostModel, LaneShards, ManualClock,
+                         OverloadPolicy, SolverMux)
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="mesh tests need the 8-virtual-device session (conftest)")
+
+
+def _run(mesh_size, *, lanes=4, ticks=3, steal_ratio=None):
+    """Replay the committed overload trace (policy on, the usual
+    2-launch budget scaled by the mesh) through one mux; returns the
+    mux and the submitted jobs.  ``mesh_size=None`` exercises the
+    default construction path."""
+    cm = CostModel()
+    spec = K.get("mmse_equalize")
+    unit = cm.launch_cost("mmse_equalize", spec.base,
+                          ((12, 8), (12, 2)), lanes)
+    scale = mesh_size if mesh_size else 1
+    pol = OverloadPolicy(budget=2.0 * scale * unit, cost_model=cm)
+    clock = ManualClock()
+    mux = SolverMux(lanes=lanes, clock=clock, pressure=2 * lanes,
+                    policy=pol, mesh_size=mesh_size)
+    if steal_ratio is not None:
+        mux._steal_ratio = steal_ratio
+    jobs, by_tick = [], {}
+    for e in overload_trace(ticks, lanes):
+        by_tick.setdefault(e["tick"], []).append(e)
+    for t in range(2 * ticks):
+        for e in by_tick.get(t, ()):
+            jobs.append(mux.submit(
+                e["pipeline"],
+                *job_args(e["pipeline"], e["n"], e["k"], e["seed"]),
+                deadline=clock() + e["deadline_ticks"] * OVERLOAD_TICK,
+                priority=e["priority"]))
+        mux.poll()
+        clock.advance(OVERLOAD_TICK)
+    mux.run()
+    return mux, jobs
+
+
+# ---------------- mesh=1 degradation ----------------
+
+def test_mesh1_bit_identical_to_default_path():
+    """Explicit mesh_size=1 builds no mesh and replays the overload
+    trace with the exact event stream and outputs of the default mux —
+    the degradation guarantee CI asserts alongside the golden trace."""
+    mux_a, jobs_a = _run(None)
+    mux_b, jobs_b = _run(1)
+    assert mux_b.shards is None and mux_b.total_lanes == mux_b.lanes
+    assert mux_a.events == mux_b.events
+    assert len(jobs_a) == len(jobs_b)
+    for a, b in zip(jobs_a, jobs_b):
+        assert a.state == b.state and a.seq == b.seq
+        if a.state == "done":
+            np.testing.assert_array_equal(np.asarray(a.out),
+                                          np.asarray(b.out))
+    # no mesh fields leak into single-device events (golden-trace shape)
+    for ev in mux_b.events:
+        assert "mesh" not in ev and "shard" not in ev
+
+
+def test_mesh1_launch_records_carry_defaults():
+    mux, _ = _run(1)
+    for rec in mux.metrics().launches:
+        assert rec.mesh == 1 and rec.shard == 0
+
+
+# ---------------- mesh-spanning numerical equality ----------------
+
+def test_shard_map_wrap_bit_identical_to_jit():
+    """A LaneShards-wrapped pipeline entry point equals the plain jit'd
+    one bit-for-bit — the lane axis is embarrassingly parallel."""
+    shards = LaneShards.build(4)
+    rng = np.random.default_rng(0)
+    h = rng.standard_normal((8, 12, 8)).astype(np.float32)
+    y = rng.standard_normal((8, 12, 2)).astype(np.float32)
+    got = jax.jit(shards.wrap(pp.mmse_equalize_pallas, 2))(h, y)
+    want = jax.jit(pp.mmse_equalize_pallas)(h, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mesh2_outputs_match_mesh1():
+    """Serving the same trace at mesh=2 completes every hard job with
+    outputs numerically identical to the mesh=1 run, and actually uses
+    mesh-spanning launches to do it."""
+    _, jobs1 = _run(1)
+    mux2, jobs2 = _run(2)
+    snap = mux2.metrics()
+    assert any(rec.mesh == 2 for rec in snap.launches), \
+        "mesh=2 run never spanned the mesh"
+    assert any(ev["event"] == "shard_split" for ev in mux2.events)
+    by_seq = {j.seq: j for j in jobs1}
+    compared = 0
+    for j in jobs2:
+        other = by_seq[j.seq]
+        if j.state == "done" and other.state == "done":
+            np.testing.assert_array_equal(np.asarray(j.out),
+                                          np.asarray(other.out))
+            compared += 1
+    assert compared >= 10
+
+
+# ---------------- balancing / splitting ----------------
+
+def test_local_launches_balance_across_shards():
+    """Back-to-back full lane groups place on alternating shards (least
+    accumulated load wins)."""
+    clock = ManualClock()
+    mux = SolverMux(lanes=4, clock=clock, mesh_size=2)
+    for i in range(4):
+        mux.submit("cholesky_solve", *job_args("cholesky_solve", 8, 2, i))
+    mux.poll()
+    for i in range(4, 8):
+        mux.submit("cholesky_solve", *job_args("cholesky_solve", 8, 2, i))
+    mux.poll()
+    shards_used = [rec.shard for rec in mux.metrics().launches]
+    assert sorted(shards_used) == [0, 1]
+
+
+def test_flush_bucket_drains_spanning_first():
+    """A backlog of lanes*mesh bucket-mates drains as ONE mesh-spanning
+    launch on the non-policy path."""
+    clock = ManualClock()
+    mux = SolverMux(lanes=4, clock=clock, mesh_size=2)
+    jobs = [mux.submit("cholesky_solve",
+                       *job_args("cholesky_solve", 8, 2, i))
+            for i in range(8)]
+    done = mux.poll()
+    assert len(done) == 8 and all(j.state == "done" for j in jobs)
+    recs = mux.metrics().launches
+    assert len(recs) == 1 and recs[0].mesh == 2 and recs[0].shard == -1
+
+
+def test_steal_ratio_gates_splitting():
+    """With an absurd steal_ratio the cost comparison always favors
+    local launches: the policy logs shard_reject and never splits."""
+    mux, _ = _run(2, steal_ratio=1e9)
+    assert any(ev["event"] == "shard_reject" for ev in mux.events)
+    assert not any(ev["event"] == "shard_split" for ev in mux.events)
+
+
+def test_shard_metrics_reported():
+    mux, _ = _run(2)
+    snap = mux.metrics()
+    assert set(snap.shards) == {0, 1}
+    for st in snap.shards.values():
+        assert 0.0 <= st.utilization <= 1.0
+        assert st.launches > 0
+    assert math.isfinite(snap.shard_imbalance)
+    assert snap.shard_imbalance >= 1.0
+    spanning = [rec for rec in snap.launches if rec.mesh > 1]
+    assert spanning and all(rec.shard == -1 for rec in spanning)
+
+
+def test_lane_shards_accounting():
+    shards = LaneShards.build(2)
+    assert shards.size == 2
+    assert math.isnan(shards.imbalance())
+    assert shards.pick() == 0                 # tie -> lowest index
+    shards.note(0, 1.0)
+    assert shards.pick() == 1                 # least load
+    assert shards.pick([10.0, 0.0]) == 0      # budget outranks load
+    shards.note(1, 3.0)
+    assert shards.imbalance() == pytest.approx(1.5)
+    shards.note_all(1.0)
+    assert shards.load == [2.0, 4.0]
+
+
+def test_mesh_size_validation():
+    with pytest.raises(ValueError):
+        SolverMux(lanes=2, mesh_size=0)
+    with pytest.raises(ValueError):
+        LaneShards.build(jax.device_count() + 1)
+
+
+# ---------------- cost model: per-mesh pricing ----------------
+
+def test_launch_cost_mesh_pricing():
+    """mesh=1 keeps the exact legacy expression; mesh>1 prices
+    overhead(mesh) + ceil(lanes/mesh) per-shard lane time."""
+    cm = CostModel()
+    spec = K.get("mmse_equalize")
+    shapes = ((12, 8), (12, 2))
+    legacy = cm.launch_cost("mmse_equalize", spec.base, shapes, 8)
+    assert legacy == cm.launch_cost("mmse_equalize", spec.base, shapes,
+                                    8, mesh=1)
+    lane = cm.lane_cost("mmse_equalize", spec.base, shapes)
+    sharded = cm.launch_cost("mmse_equalize", spec.base, shapes, 8,
+                             mesh=4)
+    assert sharded == pytest.approx(cm.overhead(4) + 2 * lane)
+    # a spanning flush of a full mesh-wide group beats the serial
+    # launches it replaces (the split decision's whole premise)
+    assert sharded < 4 * cm.launch_cost("mmse_equalize", spec.base,
+                                        shapes, 2)
+
+
+def test_overhead_monotone_in_mesh():
+    cm = CostModel()
+    assert cm.overhead(1) == cm.launch_overhead
+    assert cm.overhead(2) > cm.overhead(1)
+    assert cm.overhead(4) > cm.overhead(2)
+
+
+def test_from_bench_json_calibrates_mesh_overhead(tmp_path):
+    """Sharded bench rows re-fit per-mesh launch overheads: residual =
+    wall - ceil(lanes/mesh) * lane_time at the calibrated rate."""
+    rate = 2e-9
+    flops = 1e6
+    lane = flops * rate
+    payload = {
+        "schema": 1,
+        "rows": [],
+        "variants": [{"pipeline": "mmse_equalize", "variant": "base",
+                      "n": 8, "dispatches": 3, "model_flops": flops,
+                      "wall_us": lane * 1e6}],
+        "dispatch_counts": {},
+        "sharded": [{"pipeline": "mmse_equalize", "variant": "base",
+                     "mesh": 4, "lanes": 16,
+                     "wall_us": (3e-4 + 4 * lane) * 1e6,
+                     "model_flops": flops}],
+    }
+    path = tmp_path / "bench.json"
+    import json
+    path.write_text(json.dumps(payload))
+    cm = CostModel.from_bench_json(str(path))
+    assert 4 in cm.mesh_overhead
+    assert cm.overhead(4) == pytest.approx(3e-4, rel=0.05)
+
+
+# ---------------- scaling acceptance ----------------
+
+def test_sharded_overload_mesh4_scales_3x():
+    """The acceptance floor: on the committed deterministic overload
+    trace (fixed virtual window, no drain), mesh=4 aggregate lane
+    throughput is at least 3x mesh=1, with per-shard utilization
+    reported for every shard."""
+    s1 = run_sharded_overload(1, ticks=3)
+    s4 = run_sharded_overload(4, ticks=3)
+    assert s1["jobs"] == s4["jobs"]           # identical offered load
+    assert s4["throughput"] >= 3.0 * s1["throughput"]
+    assert set(s4["shard_util"]) == {0, 1, 2, 3}
+    assert s4["spanning"] > 0
+    assert s4["attainment_hard"] >= s1["attainment_hard"]

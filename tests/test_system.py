@@ -73,8 +73,8 @@ def test_spmd_lower_compile_small_mesh():
     """The production sharding rules compile under SPMD on an 8-device
     placeholder mesh (subprocess so the 1-device test session is safe)."""
     prog = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from repro.launch.xla_env import force_host_device_count
+        force_host_device_count(8)
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.configs import get_smoke

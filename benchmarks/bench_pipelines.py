@@ -40,7 +40,14 @@ replayed on a fixed virtual window against mesh-sharded muxes (mesh
 sizes 1/2/4/8 on virtual CPU devices), persisting aggregate throughput
 scaling, per-shard utilization, and the per-mesh launch calibration
 rows (``serve_slo/sharded/*``, also gated by ``check_bench_json``:
-mesh=4 throughput must strictly beat mesh=1).
+mesh=4 throughput must strictly beat mesh=1), and the FAULTS sweep:
+the committed chaos fault trace (launch failures + NaN lanes + a
+blackholed shard) replayed at mesh=4 via
+``repro.launch.serve_solvers.run_chaos`` against the fault-free
+reference, persisting hard-SLO attainment under faults, the zero
+silent-loss count, and the quarantine/reinstatement/demotion
+observables (``serve_slo/faults/*``, gated by ``check_bench_json``:
+hard_lost must be 0 and the attainment ratio at least 0.8).
 """
 from __future__ import annotations
 
@@ -364,3 +371,49 @@ def run_slo() -> None:
              throughput[4] / throughput[1],
              f"mesh4={throughput[4]:.2f}/tick,"
              f"mesh1={throughput[1]:.2f}/tick", unit="ratio")
+
+    # ---- fault-tolerance chaos sweep: the committed fault trace
+    # (launch failures + NaN lanes + a blackholed shard) replayed at
+    # mesh=4 against the fault-free reference run — virtual clock +
+    # seeded injector, so every observable is exact.  Rows required by
+    # check_bench_json; the fault-free rows above are produced with NO
+    # injector attached and stay bit-identical ----
+    import pathlib
+
+    from repro.launch.serve_solvers import run_chaos
+
+    if n_dev >= 4:
+        header("serve SLO faults: chaos replay, committed fault trace, "
+               "mesh=4")
+        trace_path = (pathlib.Path(__file__).parent.parent
+                      / "tests" / "data" / "fault_trace.json")
+        faulted = run_chaos(str(trace_path))
+        clean = run_chaos(None)
+        ratio = (faulted["attainment_hard"] / clean["attainment_hard"]
+                 if clean["attainment_hard"] > 0 else 0.0)
+        emit("serve_slo/faults/hard_attainment_chaos",
+             faulted["attainment_hard"] * 100.0,
+             f"jobs={faulted['jobs']},done={faulted['done']},"
+             f"failed={faulted['failed']},dropped={faulted['dropped']},"
+             f"retries={faulted['retries']},pending={faulted['pending']}",
+             unit="percent")
+        emit("serve_slo/faults/hard_attainment_clean",
+             clean["attainment_hard"] * 100.0,
+             f"jobs={clean['jobs']},done={clean['done']},"
+             f"failed={clean['failed']}", unit="percent")
+        emit("serve_slo/faults/attainment_ratio", ratio,
+             f"floor=0.8,chaos={faulted['attainment_hard']:.4f},"
+             f"clean={clean['attainment_hard']:.4f}", unit="ratio")
+        emit("serve_slo/faults/hard_lost", float(faulted["hard_lost"]),
+             f"hard_failed={faulted['hard_failed']},"
+             f"failed_jobs={faulted['failed_jobs']}", unit="count")
+        emit("serve_slo/faults/containment",
+             float(faulted["quarantines"]),
+             f"quarantines={faulted['quarantines']},"
+             f"reinstatements={faulted['reinstatements']},"
+             f"demotions={faulted['demotions']},"
+             f"time_to_recover={faulted['time_to_recover']:.2f}",
+             unit="count")
+    else:
+        emit("serve_slo/faults/skipped", 0.0,
+             f"needs 4 devices, have {n_dev}", unit="count")

@@ -26,6 +26,13 @@ deterministic virtual-clock trace, so this is exact, not flaky), and
 the payload's ``sharded`` calibration rows must include measured
 mesh > 1 launches.
 
+So is the fault-tolerance chaos replay: the ``serve_slo/faults/*``
+rows must show zero silently-lost hard jobs, at least one quarantine,
+reinstatement, and variant demotion, and a hard-attainment ratio of at
+least 0.8 against the fault-free reference (the replay is seeded and
+virtual-clocked, so the gate is exact).  The fault-free serving rows
+are produced with no injector attached and stay bit-identical.
+
   PYTHONPATH=src python -m benchmarks.check_bench_json BENCH_pipelines.json
 """
 from __future__ import annotations
@@ -171,6 +178,32 @@ def check(path: str) -> None:
     speedup = rows.get("serve_slo/sharded/speedup_mesh4")
     assert speedup and speedup["unit"] == "ratio", (
         "serve_slo/sharded/speedup_mesh4 ratio row missing")
+    # Fault-tolerance chaos rows: the committed fault trace replayed at
+    # mesh=4 must have lost ZERO hard jobs silently, quarantined AND
+    # reinstated the blackholed shard, demoted at least one variant,
+    # and kept hard attainment within 80% of the fault-free reference.
+    # The replay is a seeded virtual-clock scenario, so these are exact.
+    lost = rows.get("serve_slo/faults/hard_lost")
+    ratio = rows.get("serve_slo/faults/attainment_ratio")
+    contain = rows.get("serve_slo/faults/containment")
+    assert lost and ratio and contain, (
+        "serve_slo faults rows missing — regenerate with "
+        "`--only variants,serve_slo --json-out ...`")
+    assert lost["unit"] == "count" and lost["us_per_call"] == 0.0, (
+        f"chaos replay silently lost hard jobs: {lost['us_per_call']} "
+        f"({lost['derived']})")
+    assert ratio["unit"] == "ratio" and ratio["us_per_call"] >= 0.8, (
+        f"hard attainment under faults fell below 80% of the fault-free "
+        f"run: {ratio['us_per_call']} ({ratio['derived']})")
+    fields = dict(kv.split("=") for kv in contain["derived"].split(","))
+    assert {"quarantines", "reinstatements",
+            "demotions"} <= set(fields), (
+        f"faults containment row lacks counters: {contain['derived']}")
+    for counter in ("quarantines", "reinstatements", "demotions"):
+        assert int(fields[counter]) >= 1, (
+            f"chaos replay never exercised {counter}: "
+            f"{contain['derived']}")
+
     sharded = payload.get("sharded", [])
     spanning = [rec for rec in sharded if rec.get("mesh", 1) > 1]
     assert spanning, ("payload 'sharded' section has no mesh > 1 "
@@ -185,7 +218,8 @@ def check(path: str) -> None:
           f"{on['us_per_call']:.0f}% > {off['us_per_call']:.0f}% baseline, "
           f"{len(live)} drift pairs observed, sharded mesh4 "
           f"{thr[4] / thr[1]:.1f}x mesh1 ({len(spanning)} spanning "
-          f"calibration rows)")
+          f"calibration rows), chaos hard_lost=0 at attainment ratio "
+          f"{ratio['us_per_call']:.3f}")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,16 @@ Two helpers here are shared infrastructure rather than CLI plumbing:
   trace (each entry a seed-keyed job, never raw arrays) through a mux on
   a virtual clock, returning the mux so callers can assert on its
   ``events`` decision log (the golden trace-replay regression test).
+* :func:`run_chaos` — the seeded chaos-replay scenario (committed fault
+  trace + mesh of lane shards) behind ``run_slo``'s ``serve_slo/faults``
+  rows and the fault-tolerance acceptance test: launch failures, NaN
+  lanes, and a blackholed shard injected into the mixed-priority trace,
+  with the supervision/quarantine/demotion observables summarized.
+
+Chaos flags: ``--fault-trace tests/data/fault_trace.json`` attaches a
+seeded :class:`~repro.serve.faults.FaultInjector` to the TTI replay;
+``--chaos`` runs the canonical chaos scenario instead (requires
+``--fault-trace``; ``--fault-seed`` overrides the trace seed).
 """
 from __future__ import annotations
 
@@ -343,6 +353,101 @@ def run_sharded_overload(mesh_size: int, *, ticks: int = 6,
     }
 
 
+# ---------------- seeded chaos replay (faults bench + tests) ----------
+
+def chaos_trace(ticks: int, lanes: int, seed: int = 0) -> list[dict]:
+    """The canonical chaos workload: per tick, ``lanes`` hard MMSE
+    equalizations (deadline 3 ticks — the SLO traffic), ``lanes``
+    best-effort MMSE refinements (deadline 2 ticks), and one hard n=128
+    Cholesky whitening solve (deadline 3 ticks) whose bucket dispatches
+    to the *blocked* variant — the target the committed fault trace
+    shoots at to force a variant demotion."""
+    trace, seq = [], 0
+    for t in range(ticks):
+        for i in range(lanes):
+            trace.append(dict(tick=t, pipeline="mmse_equalize", n=8, k=2,
+                              priority="hard", deadline_ticks=3.0,
+                              seed=seed * 100003 + seq)); seq += 1
+        for i in range(lanes):
+            trace.append(dict(tick=t, pipeline="mmse_equalize", n=8, k=2,
+                              priority="best_effort", deadline_ticks=2.0,
+                              seed=seed * 100003 + seq)); seq += 1
+        trace.append(dict(tick=t, pipeline="cholesky_solve", n=128,
+                          k=2, priority="hard", deadline_ticks=3.0,
+                          seed=seed * 100003 + seq)); seq += 1
+    return trace
+
+
+def run_chaos(fault_trace: str | dict | None, *, mesh_size: int = 4,
+              ticks: int = 10, lanes: int = 2, seed: int = 0,
+              fault_seed: int = 0) -> dict:
+    """Replay the chaos workload against a ``mesh_size`` lane mesh with
+    the given fault trace injected (``None``: the fault-free reference
+    run the attainment ratio is judged against).  Deterministic end to
+    end — virtual clock, seed-keyed jobs, seed-keyed faults — so the
+    event stream is golden-file-pinnable.
+
+    Returns the summary ``benchmarks.bench_pipelines.run_slo`` emits as
+    ``serve_slo/faults/*`` rows: hard-SLO attainment, per-state job
+    counts, ``hard_lost`` (hard jobs left in no terminal state, or
+    failed without a structured reason — must be zero), the supervision
+    observables (retries / failed jobs / quarantines / reinstatements /
+    demotions), and the drained event stream."""
+    import os
+
+    from repro.serve import FaultInjector
+    if fault_trace is None:
+        injector = None
+    elif isinstance(fault_trace, (str, os.PathLike)):
+        injector = FaultInjector.from_json(fault_trace, seed=fault_seed)
+    else:
+        injector = FaultInjector(fault_trace, seed=fault_seed)
+    pol = OverloadPolicy(budget=None, cost_model=CostModel())
+    trace = chaos_trace(ticks, lanes, seed)
+    jobs, clock = [], ManualClock()
+    mux = SolverMux(lanes=lanes, clock=clock, pressure=2 * lanes,
+                    policy=pol, mesh_size=mesh_size, injector=injector)
+    by_tick: dict[int, list[dict]] = {}
+    for entry in trace:
+        by_tick.setdefault(entry["tick"], []).append(entry)
+    for t in range(ticks + ticks):        # arrival ticks + drain ticks
+        for e in by_tick.get(t, ()):
+            jobs.append(mux.submit(
+                e["pipeline"],
+                *job_args(e["pipeline"], e["n"], e["k"], e["seed"]),
+                deadline=clock() + e["deadline_ticks"] * OVERLOAD_TICK,
+                priority=e["priority"]))
+        mux.poll()
+        clock.advance(OVERLOAD_TICK)
+    mux.run()
+    snap = mux.metrics()
+    hard = [j for j in jobs if j.priority == "hard"]
+    return {
+        "faulted": injector is not None,
+        "mesh": mesh_size,
+        "jobs": len(jobs),
+        "done": sum(1 for j in jobs if j.state == "done"),
+        "failed": sum(1 for j in jobs if j.state == "failed"),
+        "dropped": snap.total_dropped,
+        "hard_failed": sum(1 for j in hard if j.state == "failed"),
+        # a hard job is LOST iff it reached no terminal state or failed
+        # without a structured reason — the acceptance gate is zero
+        "hard_lost": sum(1 for j in hard
+                         if j.state not in ("done", "failed", "dropped")
+                         or (j.state == "failed" and not j.reason)),
+        "attainment_hard": hard_attainment(jobs),
+        "retries": snap.faults.retries,
+        "failed_jobs": snap.faults.failed_jobs,
+        "quarantines": snap.faults.quarantines,
+        "reinstatements": snap.faults.reinstatements,
+        "demotions": snap.faults.demotions,
+        "time_to_recover": snap.faults.time_to_recover,
+        "alerts": list(snap.faults.alerts),
+        "pending": mux.pending(),
+        "events": mux.drain_events(),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=8,
@@ -372,11 +477,50 @@ def main(argv=None):
                          "over this many local devices (needs "
                          "--xla_force_host_platform_device_count or "
                          "real devices; default REPRO_SERVE_MESH_SIZE)")
+    ap.add_argument("--fault-trace", default=None,
+                    help="JSON fault trace (see repro.serve.faults) to "
+                         "inject into the replay via a seeded "
+                         "FaultInjector")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for the fault injector's per-attempt rng "
+                         "streams (requires --fault-trace; a seed in "
+                         "the trace file wins)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the canonical chaos scenario (mesh=4 "
+                         "lane shards, mixed-priority trace, the fault "
+                         "trace injected) instead of the TTI replay and "
+                         "print the supervision observables (requires "
+                         "--fault-trace)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.budget_us is not None and not args.policy:
         ap.error("--budget-us requires --policy")
+    if args.fault_seed is not None and args.fault_trace is None:
+        ap.error("--fault-seed requires --fault-trace")
+    if args.chaos and args.fault_trace is None:
+        ap.error("--chaos requires --fault-trace")
     sizes = [int(s) for s in args.sizes.split(",")]
+
+    if args.chaos:
+        summary = run_chaos(args.fault_trace, seed=args.seed,
+                            fault_seed=args.fault_seed or 0)
+        base = run_chaos(None, seed=args.seed)
+        print(f"chaos replay: mesh={summary['mesh']} "
+              f"jobs={summary['jobs']} done={summary['done']} "
+              f"failed={summary['failed']} dropped={summary['dropped']}")
+        print(f"  hard: lost={summary['hard_lost']} "
+              f"failed={summary['hard_failed']} "
+              f"attainment={summary['attainment_hard']:.2%} "
+              f"(fault-free {base['attainment_hard']:.2%})")
+        print(f"  supervision: retries={summary['retries']} "
+              f"quarantines={summary['quarantines']} "
+              f"reinstatements={summary['reinstatements']} "
+              f"demotions={summary['demotions']} "
+              f"t_recover={summary['time_to_recover']:.2f}")
+        for alert in summary["alerts"]:
+            print(f"  ALERT {alert}")
+        assert summary["hard_lost"] == 0, "hard jobs silently lost"
+        return
 
     rng = np.random.default_rng(args.seed)
     clock = ManualClock()
@@ -389,9 +533,15 @@ def main(argv=None):
         policy = OverloadPolicy(budget=budget)
     elif args.adapt:
         cost_model = CostModel(adaptive=True)
+    injector = None
+    if args.fault_trace is not None:
+        from repro.serve import FaultInjector
+        injector = FaultInjector.from_json(args.fault_trace,
+                                           seed=args.fault_seed or 0)
     mux = SolverMux(lanes=args.lanes, max_wait=args.max_wait_ms * 1e-3,
                     clock=clock, policy=policy, cost_model=cost_model,
-                    adapt=args.adapt or None, mesh_size=args.mesh)
+                    adapt=args.adapt or None, mesh_size=args.mesh,
+                    injector=injector)
 
     t0 = time.perf_counter()
     jobs, done, sample = [], [], None
@@ -414,12 +564,16 @@ def main(argv=None):
         print(f"empty trace ({args.slots} slots): nothing served")
         return
 
-    # spot-check a served result against the registry oracle
-    sample = sample if (sample is not None and sample.state == "done") \
-        else done[0]
-    want = K.get(sample.pipeline).run_oracle_lane(*sample.args)
-    err = np.max(np.abs(sample.out - want)) / (np.max(np.abs(want)) + 1e-12)
-    assert err < 1e-3, f"oracle mismatch on sample job: rel err {err:.2e}"
+    # spot-check a served result against the registry oracle (under
+    # fault injection some jobs may be terminally failed — skip those)
+    if sample is None or sample.state != "done":
+        sample = next((j for j in done if j.state == "done"), None)
+    if sample is not None:
+        want = K.get(sample.pipeline).run_oracle_lane(*sample.args)
+        err = np.max(np.abs(sample.out - want)) \
+            / (np.max(np.abs(want)) + 1e-12)
+        assert err < 1e-3, \
+            f"oracle mismatch on sample job: rel err {err:.2e}"
 
     snap = mux.metrics()
     print(f"trace: {args.slots} slots x sizes {sizes}, lanes={args.lanes} "

@@ -25,7 +25,11 @@ lane-pool accounting + batch lifecycle):
            preempted/coalesced counters, per-shard utilization
   shard    LaneShards                   (mesh-sharded lane pools:
                                          shard_map wrapping, placement,
-                                         per-shard load accounting)
+                                         per-shard load accounting +
+                                         quarantine/probe health)
+  faults   FaultInjector                (seeded fault injection driving
+                                         the launch-supervision /
+                                         quarantine / demotion paths)
   engine   back-compat shim re-exporting the original names
 
 The kernel registry (``repro.kernels``) is the routing table: any
@@ -37,7 +41,10 @@ from repro.serve.core import (EngineCore, FifoEngineCore,  # noqa: F401
                               ManualClock, pad_group)
 from repro.serve.cost import (CostModel, DriftStat,  # noqa: F401
                               RobustEstimator)
-from repro.serve.metrics import (DropRecord, LatencyStats,  # noqa: F401
+from repro.serve.faults import (Fault, FaultInjector,  # noqa: F401
+                                InjectedLaunchError)
+from repro.serve.metrics import (DropRecord, FailRecord,  # noqa: F401
+                                 FaultStats, LatencyStats,
                                  LaunchRecord, MetricsSnapshot,
                                  PipelineStats, Recorder, ShardStats,
                                  shard_stats)
@@ -62,7 +69,8 @@ __all__ = [
     "PipelineEngine", "SolveJob", "SolverMux", "VariantDispatcher",
     "OverloadPolicy", "CostModel", "DriftStat", "RobustEstimator",
     "ServeConfig", "global_config", "BucketTuner",
-    "DropRecord", "LatencyStats", "LaunchRecord", "MetricsSnapshot",
+    "DropRecord", "FailRecord", "FaultStats", "LatencyStats",
+    "LaunchRecord", "MetricsSnapshot",
     "PipelineStats", "Recorder", "ShardStats", "shard_stats",
-    "LaneShards",
+    "LaneShards", "Fault", "FaultInjector", "InjectedLaunchError",
 ]

@@ -33,6 +33,15 @@ mesh_size                 REPRO_SERVE_MESH_SIZE              1
 shard_split_pressure      REPRO_SERVE_SHARD_SPLIT_PRESSURE   2.0
 steal_ratio               REPRO_SERVE_STEAL_RATIO            1.0
 imbalance_alert           REPRO_SERVE_IMBALANCE_ALERT        1.5
+fault_trace               REPRO_SERVE_FAULT_TRACE            "" (off)
+fault_seed                REPRO_SERVE_FAULT_SEED             0
+max_retries               REPRO_SERVE_MAX_RETRIES            2
+retry_backoff             REPRO_SERVE_RETRY_BACKOFF          1e-4
+quarantine_after          REPRO_SERVE_QUARANTINE_AFTER       3
+probe_after               REPRO_SERVE_PROBE_AFTER            3.0
+demote_after              REPRO_SERVE_DEMOTE_AFTER           2
+watchdog_ratio            REPRO_SERVE_WATCHDOG_RATIO         0.0 (off)
+event_cap                 REPRO_SERVE_EVENT_CAP              100000
 ========================  =================================  ========
 
 * ``calibrate`` — master switch for ONLINE re-fitting: with it off, a
@@ -85,6 +94,42 @@ imbalance_alert           REPRO_SERVE_IMBALANCE_ALERT        1.5
 * ``imbalance_alert`` — per-shard lane-load imbalance ratio
   (max/mean dispatched lanes) above which ``MetricsSnapshot`` flags
   ``shard_imbalance_alert``.
+* ``fault_trace`` — path to a JSON fault trace for
+  :class:`repro.serve.faults.FaultInjector`; empty (the default) means
+  no injector is built and every serving path is bit-identical to the
+  fault-free stack (golden traces stay pinned).
+* ``fault_seed`` — seed keying the injector's per-attempt rng streams
+  (a ``seed`` field inside the trace file wins).
+* ``max_retries`` — supervised relaunch attempts per failed group
+  beyond the first try.  Hard-deadline jobs are ALWAYS retried to this
+  bound; a best-effort group whose retries exhaust is failed with a
+  structured reason rather than silently dropped.
+* ``retry_backoff`` — base of the bounded exponential backoff charged
+  (in seconds of launch budget) against the failing group's shard for
+  each retry: retry k debits ``retry_backoff * 2**k``.  The debit
+  starves the admission budget, not the wall-clock — replays stay
+  deterministic.
+* ``quarantine_after`` — consecutive launch failures on one shard
+  before :class:`LaneShards` quarantines it (placement stops, capacity
+  shrinks, the CostModel re-prices spanning launches at the reduced
+  mesh).
+* ``probe_after`` — scheduling-clock seconds a quarantined shard sits
+  out before the mux routes a single probe launch at it; a surviving
+  probe reinstates the shard, a failing one re-arms the timer.
+* ``demote_after`` — consecutive supervised-launch failures of one
+  (pipeline, variant, shape-bucket) before ``VariantDispatcher``
+  demotes that bucket down the ladder (tiled → blocked → base) with a
+  ``demote`` event and a drift-style alert.  Only variants that share
+  the spec's calling convention (``variant.filler is None``) demote.
+* ``watchdog_ratio`` — a launch whose measured wall exceeds
+  ``watchdog_ratio x`` the CostModel's prediction emits a ``watchdog``
+  event and counts against shard health.  0 (the default) disables the
+  watchdog: it compares real wall-clock against predictions, which is
+  machine-dependent — leaving it off keeps golden traces bit-exact.
+* ``event_cap`` — ring-buffer bound on ``mux.events``; once the cap is
+  hit the oldest events are dropped (``drain_events()`` reports how
+  many) so a long-running serve loop cannot leak memory through its
+  event log.
 """
 from __future__ import annotations
 
@@ -150,6 +195,19 @@ class ServeConfig:
         self.steal_ratio = _env_float("REPRO_SERVE_STEAL_RATIO", 1.0)
         self.imbalance_alert = _env_float(
             "REPRO_SERVE_IMBALANCE_ALERT", 1.5)
+        # ---- fault injection + launch supervision ----
+        self.fault_trace = os.environ.get("REPRO_SERVE_FAULT_TRACE", "")
+        self.fault_seed = _env_int("REPRO_SERVE_FAULT_SEED", 0)
+        self.max_retries = _env_int("REPRO_SERVE_MAX_RETRIES", 2)
+        self.retry_backoff = _env_float(
+            "REPRO_SERVE_RETRY_BACKOFF", 1e-4)
+        self.quarantine_after = _env_int(
+            "REPRO_SERVE_QUARANTINE_AFTER", 3)
+        self.probe_after = _env_float("REPRO_SERVE_PROBE_AFTER", 3.0)
+        self.demote_after = _env_int("REPRO_SERVE_DEMOTE_AFTER", 2)
+        self.watchdog_ratio = _env_float(
+            "REPRO_SERVE_WATCHDOG_RATIO", 0.0)
+        self.event_cap = _env_int("REPRO_SERVE_EVENT_CAP", 100000)
         return self
 
 

@@ -73,6 +73,9 @@ class EngineCore:
         self.clock = clock if clock is not None else time.monotonic
         self.wall = wall if wall is not None else time.perf_counter
         self.recorder = Recorder()
+        # optional repro.serve.faults.FaultInjector: None (the default)
+        # keeps every launch path bit-identical to the uninjected stack
+        self.injector = None
 
     # ---------------- accounting ----------------
 
@@ -99,8 +102,9 @@ class EngineCore:
     def reset_metrics(self) -> None:
         self.recorder.reset()
 
-    def _timed_call(self, fn, padded: list,
-                    device=None) -> tuple[np.ndarray, float]:
+    def _timed_call(self, fn, padded: list, device=None,
+                    fault_ctx: dict | None = None
+                    ) -> tuple[np.ndarray, float]:
         """Execute one padded lane-group launch and measure its wall
         clock on ``self.wall``.  The one seam every launch goes through:
         deterministic tests replace it with a synthetic wall model to
@@ -108,13 +112,39 @@ class EngineCore:
 
         ``device`` commits the inputs to one mesh shard's device before
         the call (mesh-sharded muxes placing a non-spanning launch);
-        ``None`` keeps the legacy default-device path untouched."""
+        ``None`` keeps the legacy default-device path untouched.
+
+        ``fault_ctx`` identifies the attempt to an attached
+        :class:`repro.serve.faults.FaultInjector` (``self.injector``):
+        a drawn ``raise`` fault aborts BEFORE the kernel executes
+        (:class:`~repro.serve.faults.InjectedLaunchError` — failed
+        attempts cost no kernel time), a ``nan`` fault poisons the drawn
+        output lanes, a ``stall`` fault inflates the measured wall-clock
+        (never the scheduling clock).  With no injector or no context
+        the call is exactly the legacy path."""
+        fault = None
+        if self.injector is not None and fault_ctx is not None:
+            ctx = dict(fault_ctx)
+            ctx["inputs"] = padded
+            fault = self.injector.draw(ctx)
+            if fault is not None and fault.kind == "raise":
+                from repro.serve.faults import InjectedLaunchError
+                raise InjectedLaunchError(fault.reason)
         t0 = self.wall()
         inputs = [jnp.asarray(p) for p in padded]
         if device is not None:
             inputs = [jax.device_put(x, device) for x in inputs]
         res = np.asarray(fn(*inputs))
-        return res, self.wall() - t0
+        dt = self.wall() - t0
+        if fault is not None:
+            if fault.kind == "nan":
+                res = np.array(res)            # writable copy
+                for lane in fault.lanes:
+                    if 0 <= lane < res.shape[0]:
+                        res[lane] = np.nan
+            elif fault.kind == "stall":
+                dt += fault.stall
+        return res, dt
 
     def observe_launch(self, spec, variant, key: tuple, lanes: int,
                        measured: float, mesh: int = 1) -> None:

@@ -355,6 +355,14 @@ class CostModel:
         their lane slabs in parallel, so the lane term divides by the
         shard count (``ceil`` — the padded width is what each shard
         executes) while the fixed term grows to :meth:`overhead`.
+
+        ``mesh`` is the count of shards actually PARTICIPATING in the
+        launch, not the configured mesh size: under graceful
+        degradation (a quarantined shard, see
+        :class:`repro.serve.shard.LaneShards`) the scheduler stops
+        spanning and falls back to per-shard local launches priced at
+        ``mesh=1`` — capacity loss shows up as honestly higher
+        predicted cost rather than a stale full-mesh price.
         """
         if mesh <= 1:
             return self.launch_overhead + lanes * self.lane_cost(

@@ -18,6 +18,13 @@ Every engine built on :class:`repro.serve.core.EngineCore` owns a
     best-effort work under admission control).
   * **preemptions** — one per bucket flush abandoned so a pending
     hard-deadline bucket could take its lane-time budget.
+  * **retries / failures** — launch supervision's trail: one retry per
+    supervised relaunch of a failed group, one failure per job marked
+    terminal ``state="failed"`` with a structured reason (exhausted
+    retries, persistent non-finite lane, rejected non-finite input).
+    Folded into :class:`FaultStats` (``MetricsSnapshot.faults``)
+    together with the shard-quarantine and variant-demotion counters
+    the mux attaches.
 
 ``Recorder.snapshot()`` folds the events into a :class:`MetricsSnapshot`
 with per-pipeline p50/p99/mean/max latency (overall AND per priority
@@ -162,6 +169,46 @@ class DropRecord:
 
 
 @dataclasses.dataclass(frozen=True)
+class FailRecord:
+    """One job launch supervision gave up on (terminal ``"failed"``)."""
+
+    pipeline: str
+    t: float
+    priority: str = "best_effort"
+    reason: str = "launch_failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultStats:
+    """Fault-handling observables (``MetricsSnapshot.faults``): the
+    supervision layer's health summary.  All zeros / empty on a
+    fault-free run — the block exists unconditionally so dashboards can
+    rely on its shape."""
+
+    retries: int = 0
+    """Supervised group relaunches (each charged backoff debt)."""
+    failed_jobs: int = 0
+    """Jobs marked terminal ``state="failed"`` with a reason."""
+    quarantines: int = 0
+    """Lifetime shard quarantine transitions."""
+    reinstatements: int = 0
+    """Quarantined shards returned to service by a surviving probe."""
+    demotions: int = 0
+    """Variant demotions (per-bucket fallback down the ladder)."""
+    watchdog_flags: int = 0
+    """Launches whose measured wall exceeded the predicted-cost
+    watchdog ratio."""
+    quarantined_shards: tuple = ()
+    """Shard indices currently quarantined (empty when healthy)."""
+    time_to_recover: float = math.nan
+    """Mean quarantine downtime (scheduling-clock seconds) across
+    reinstated shards; NaN before any reinstatement."""
+    alerts: tuple = ()
+    """Drift-style alert strings (e.g. ``"demote:cholesky_solve:
+    blocked->base"``) — the degradations an operator should see."""
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineStats:
     """Aggregate SLO view of one pipeline's traffic."""
 
@@ -184,6 +231,12 @@ class PipelineStats:
     bucket of large / split-complex jobs landed on the fast path."""
     dropped: int = 0
     """Jobs shed by the overload policy (expired best-effort)."""
+    failed: int = 0
+    """Jobs launch supervision marked terminal ``"failed"`` (with a
+    structured reason) — distinct from ``dropped``: these were admitted
+    but could not be served."""
+    retries: int = 0
+    """Supervised launch retries attributed to this pipeline."""
     preempted: int = 0
     """Jobs whose bucket flush was abandoned for a hard-deadline bucket
     (they stay queued and are re-admitted later — not terminal)."""
@@ -205,6 +258,12 @@ class MetricsSnapshot:
     total_dropped: int = 0
     total_preempted: int = 0
     total_coalesced: int = 0
+    total_failed: int = 0
+    total_retries: int = 0
+    faults: FaultStats = dataclasses.field(default_factory=FaultStats)
+    """Fault-handling health block (see :class:`FaultStats`).  The
+    Recorder fills retries/failed_jobs; ``SolverMux.metrics()`` attaches
+    the shard-quarantine / demotion / watchdog side it owns."""
     drift: dict = dataclasses.field(default_factory=dict)
     """``"pipeline/variant" -> repro.serve.cost.DriftStat`` — the cost
     model's predicted/measured health per pair (EWMA ratio, update
@@ -244,6 +303,8 @@ class Recorder:
             collections.defaultdict(list)
         self._drops: list[DropRecord] = []
         self._preempts: dict[str, int] = collections.defaultdict(int)
+        self._fails: list[FailRecord] = []
+        self._retries: dict[str, int] = collections.defaultdict(int)
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, t: float, variant: str = "base",
@@ -268,11 +329,21 @@ class Recorder:
     def record_preempt(self, pipeline: str, jobs: int, t: float) -> None:
         self._preempts[pipeline] += int(jobs)
 
+    def record_retry(self, pipeline: str, t: float,
+                     reason: str = "launch_failed") -> None:
+        self._retries[pipeline] += 1
+
+    def record_fail(self, pipeline: str, t: float,
+                    priority: str = "best_effort",
+                    reason: str = "launch_failed") -> None:
+        self._fails.append(FailRecord(pipeline, t, priority, reason))
+
     def snapshot(self) -> MetricsSnapshot:
         per: dict[str, PipelineStats] = {}
         names = (set(self._jobs) | {l.pipeline for l in self._launches}
                  | {d.pipeline for d in self._drops}
-                 | set(self._preempts))
+                 | {d.pipeline for d in self._fails}
+                 | set(self._preempts) | set(self._retries))
         for name in sorted(names):
             jobs = self._jobs.get(name, [])
             launches = [l for l in self._launches if l.pipeline == name]
@@ -306,6 +377,8 @@ class Recorder:
                 dispatch_counts=dict(collections.Counter(
                     l.variant for l in launches)),
                 dropped=sum(1 for d in self._drops if d.pipeline == name),
+                failed=sum(1 for d in self._fails if d.pipeline == name),
+                retries=self._retries.get(name, 0),
                 preempted=self._preempts.get(name, 0),
                 lanes_coalesced=sum(l.coalesced for l in launches),
                 latency_by_priority={p: LatencyStats.of(v)
@@ -317,4 +390,8 @@ class Recorder:
             total_launches=len(self._launches),
             total_dropped=len(self._drops),
             total_preempted=sum(self._preempts.values()),
-            total_coalesced=sum(l.coalesced for l in self._launches))
+            total_coalesced=sum(l.coalesced for l in self._launches),
+            total_failed=len(self._fails),
+            total_retries=sum(self._retries.values()),
+            faults=FaultStats(retries=sum(self._retries.values()),
+                              failed_jobs=len(self._fails)))

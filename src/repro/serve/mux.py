@@ -115,6 +115,52 @@ per-shard —
 bit-for-bit the single-device scheduler above — same launches, same
 events, same metrics.
 
+Launch supervision (fault tolerance)
+------------------------------------
+
+Every mux launch is *supervised*: the attempt is wrapped, exceptions
+are caught, and the real (non-filler) output lanes are scanned for
+non-finite values.  A failed group is retried up to ``max_retries``
+times with bounded exponential backoff **charged against the admission
+budget** (``retry_backoff * 2**k`` debited from the failing shard's
+next-poll budget — the scheduling clock never blocks, so replays stay
+deterministic); on a mesh each retry re-places onto a shard that has
+not failed this supervision.  When retries exhaust, the failure is
+contained instead of propagated:
+
+  * a launch carrying coalesced **riders** detaches them first (they
+    stay queued) and relaunches the host alone — a poisoned donor never
+    sinks its host;
+  * a **mesh-spanning** launch decomposes into per-shard local chunks,
+    isolating a sick shard instead of failing the whole slab;
+  * a multi-job local chunk **bisects** to isolate the poison lane —
+    the single job left failing is marked terminal ``state="failed"``
+    with a structured ``reason`` and the healthy remainder is served;
+  * a persistently **non-finite output lane** fails only the jobs on
+    the poisoned lanes; the rest of the launch's results are kept
+    (lanes are independent, so the good lanes are exact).
+
+Shard failures accumulate per-shard streaks
+(:class:`repro.serve.shard.LaneShards`): ``quarantine_after``
+consecutive failures quarantine the shard — placement stops,
+mesh-spanning launches are disabled (aggregate capacity shrinks and
+spanning work re-prices at the reduced mesh by falling back to local
+launches) — and after ``probe_after`` clock seconds one real launch is
+routed at it as a probe (success reinstates, failure re-arms).  Variant
+failures feed the :class:`~repro.serve.solver.VariantDispatcher`
+demotion ladder (``demote_after`` consecutive failures ban that variant
+for that bucket; resolution falls tiled -> blocked -> base), and a
+predicted-cost watchdog (``watchdog_ratio``; off by default — it
+compares real wall-clock, which golden traces must not) flags launches
+whose measured wall blows past the cost model's prediction.  All of it
+is observable: ``retry`` / ``fail`` / ``quarantine`` / ``reinstate`` /
+``demote`` / ``watchdog`` events plus the ``MetricsSnapshot.faults``
+block.  Faults are *injected* only via
+:class:`repro.serve.faults.FaultInjector` (``REPRO_SERVE_FAULT_TRACE``
+or the ``injector`` constructor arg); with no injector the supervision
+machinery is pure bookkeeping on the success path and the event/metric
+streams are bit-identical to the pre-supervision stack.
+
 API sketch::
 
     mux = SolverMux(lanes=8, policy=OverloadPolicy(budget=2e-4))
@@ -139,6 +185,7 @@ import numpy as np
 from repro.serve.config import global_config
 from repro.serve.core import EngineCore, pad_group
 from repro.serve.cost import CostModel
+from repro.serve.faults import FaultInjector, InjectedLaunchError
 from repro.serve.metrics import shard_stats
 from repro.serve.shard import LaneShards
 from repro.serve.solver import (SolveJob, VariantDispatcher,
@@ -284,6 +331,10 @@ class SolverMux(EngineCore):
                 placement/budgets, hot-bucket splitting (see the module
                 docstring); 1 builds no mesh and is bit-identical to
                 the single-device scheduler
+      injector  optional :class:`~repro.serve.faults.FaultInjector`
+                driving seeded chaos runs; ``None`` defers to
+                ``REPRO_SERVE_FAULT_TRACE`` (no trace configured — the
+                default — leaves every launch path uninjected)
 
     Every launch is measured (``wall``) and fed back through
     :meth:`observe_launch` to whichever cost model is attached — the
@@ -297,6 +348,7 @@ class SolverMux(EngineCore):
                  cost_model: CostModel | None = None,
                  adapt: bool | None = None,
                  mesh_size: int | None = None,
+                 injector: FaultInjector | None = None,
                  options: dict[str, dict] | None = None):
         super().__init__(lanes, clock=clock, wall=wall)
         if policy is not None and cost_model is not None:
@@ -326,12 +378,34 @@ class SolverMux(EngineCore):
         self._pools: dict[str, _LanePool] = {}
         self._seq = 0
         self.events: list[dict] = []
+        # ---- launch supervision (module docstring) ----
+        # injector stays None with no trace configured, keeping every
+        # launch path bit-identical to the uninjected stack
+        self.injector = injector if injector is not None \
+            else FaultInjector.from_config()
+        self.max_retries = global_config.max_retries
+        self.retry_backoff = global_config.retry_backoff
+        self.quarantine_after = global_config.quarantine_after
+        self.probe_after = global_config.probe_after
+        self.demote_after = global_config.demote_after
+        self.watchdog_ratio = global_config.watchdog_ratio
+        self._event_cap = global_config.event_cap
+        self._fault_debt = [0.0] * (self.shards.size if self.shards
+                                    else 1)
+        self._probe_ready: list[int] = []
+        self._watchdogs = 0
+        self._events_dropped = 0
 
     @property
     def total_lanes(self) -> int:
-        """Aggregate lane-pool capacity: ``lanes`` per shard across the
-        mesh (``lanes`` itself on a single device)."""
-        return self.lanes * (self.shards.size if self.shards else 1)
+        """Aggregate lane-pool capacity: ``lanes`` per *healthy* shard
+        across the mesh (``lanes`` itself on a single device) — a
+        quarantined shard's lanes are out of service until its probe
+        reinstates it, so capacity visibly shrinks under degradation."""
+        if self.shards is None:
+            return self.lanes
+        healthy = len(self.shards.healthy())
+        return self.lanes * (healthy if healthy else self.shards.size)
 
     @property
     def cost_model(self) -> CostModel | None:
@@ -364,6 +438,12 @@ class SolverMux(EngineCore):
         Returns the queued :class:`SolveJob` (``out`` filled once a
         dispatch containing it runs; ``state`` becomes ``"done"`` or,
         under a shedding policy, possibly ``"dropped"``).
+
+        Admission-time validation: a job whose float/complex args carry
+        NaN/Inf is rejected here — terminal ``state="failed"`` with
+        ``reason="nonfinite_input"`` — instead of being enqueued, so a
+        poisoned input can never contaminate the lane group (and its
+        coalesced riders) it would have been stacked into.
         """
         if priority not in SolveJob.PRIORITIES:
             raise ValueError(f"priority must be one of "
@@ -374,6 +454,16 @@ class SolverMux(EngineCore):
                        pipeline=pipeline, deadline=deadline,
                        submitted_at=self.clock(), seq=self._seq,
                        priority=priority)
+        if any(a.dtype.kind in "fc" and not np.all(np.isfinite(a))
+               for a in job.args):
+            job.state = "failed"
+            job.reason = "nonfinite_input"
+            job.finished_at = job.submitted_at
+            self.recorder.record_fail(pipeline, job.submitted_at,
+                                      job.priority, "nonfinite_input")
+            self._event("fail", t=job.submitted_at, pipeline=pipeline,
+                        seq=job.seq, reason="nonfinite_input")
+            return job
         pool.enqueue(job)
         if self.tuner is not None:
             self.tuner.note_arrival(pipeline, job.shape_key(),
@@ -415,18 +505,50 @@ class SolverMux(EngineCore):
                 snap, shards=shards, shard_imbalance=imb,
                 shard_imbalance_alert=(not math.isnan(imb)
                                        and imb >= self._imbalance_alert))
+        demotions = [d for p in self._pools.values()
+                     for d in p.dispatcher.demotions]
+        quarantined: tuple = ()
+        quarantines = reinstatements = 0
+        recover = math.nan
+        if self.shards is not None:
+            quarantines = self.shards.quarantines
+            reinstatements = self.shards.reinstatements
+            quarantined = tuple(s for s in range(self.shards.size)
+                                if self.shards.quarantined(s))
+            if self.shards.recovery_times:
+                recover = (sum(self.shards.recovery_times)
+                           / len(self.shards.recovery_times))
+        snap = dataclasses.replace(snap, faults=dataclasses.replace(
+            snap.faults, quarantines=quarantines,
+            reinstatements=reinstatements, demotions=len(demotions),
+            watchdog_flags=self._watchdogs,
+            quarantined_shards=quarantined, time_to_recover=recover,
+            alerts=tuple(f"demote:{d['pipeline']}:"
+                         f"{d['from']}->{d['to']}" for d in demotions)))
         return snap
 
     def pending(self) -> int:
         return sum(p.queued() for p in self._pools.values())
 
     def drain_events(self) -> list[dict]:
-        """Return and clear the scheduling-decision event log."""
+        """Return and clear the scheduling-decision event log.  When the
+        bounded buffer (``REPRO_SERVE_EVENT_CAP``) overflowed since the
+        last drain, the batch is prefixed with one ``events_dropped``
+        record counting the discarded oldest records — overflow is
+        reported, never silent."""
         events, self.events = self.events, []
+        if self._events_dropped:
+            events = [{"event": "events_dropped",
+                       "count": self._events_dropped}] + events
+            self._events_dropped = 0
         return events
 
     def _event(self, kind: str, t: float, **fields) -> None:
         self.events.append({"event": kind, "t": t, **fields})
+        if self._event_cap and len(self.events) > self._event_cap:
+            drop = len(self.events) - self._event_cap
+            del self.events[:drop]
+            self._events_dropped += drop
 
     # ---------------- dispatch ----------------
 
@@ -440,30 +562,31 @@ class SolverMux(EngineCore):
     def _launch(self, pool: _LanePool, key: tuple, chunk: list,
                 riders: tuple = (), now: float | None = None,
                 mesh: int = 1, shard: int | None = None) -> list:
-        """One grid launch: ``chunk`` jobs of the (pool, key) bucket plus
-        optional cross-shape ``riders`` embedded into otherwise-padded
-        lanes.  Records the launch + per-job latencies and logs a
-        ``flush`` event.
+        """One supervised grid launch: ``chunk`` jobs of the (pool, key)
+        bucket plus optional cross-shape ``riders`` embedded into
+        otherwise-padded lanes.  Records the launch + per-job latencies
+        and logs a ``flush`` event.
 
         On a mesh, ``mesh > 1`` runs the shard_map-wrapped spanning form
         (lane axis split over the mesh, padded to ``lanes * mesh`` so
         every shard gets a whole slab); ``mesh == 1`` places the launch
-        on ``shard`` (least-loaded when unspecified), committing inputs
-        to that shard's device.  Without a mesh both default to the
-        legacy single-device path."""
+        on ``shard`` (least-loaded healthy when unspecified), committing
+        inputs to that shard's device.  Without a mesh both default to
+        the legacy single-device path.
+
+        Preparation errors (coalesce-embed nonconformance, padding
+        misdeclaration) propagate and leave the jobs queued — they are
+        scheduler bugs, not launch faults; execution goes through
+        :meth:`_supervise`, which contains failures instead (retry /
+        bisect / terminal per-job ``failed``)."""
         spec = pool.spec
-        device = None
+        t = self.clock() if now is None else now
         if mesh > 1:
-            variant, fn = pool.dispatcher.resolve_sharded(key)
-            rec_shard = -1
+            variant, _ = pool.dispatcher.resolve_sharded(key)
         else:
-            variant, fn = pool.dispatcher.resolve(key)
-            if self.shards is not None:
-                if shard is None:
-                    shard = self.shards.pick()
-                device = self.shards.devices[shard]
-            rec_shard = shard if shard is not None else 0
+            variant, _ = pool.dispatcher.resolve(key)
         width = self.lanes * max(1, mesh)
+        riders = tuple(riders)
         if riders:
             big_shapes = tuple(shape for shape, _ in key)
             embedded = [spec.coalesce.embed(j.args, big_shapes)
@@ -479,59 +602,259 @@ class SolverMux(EngineCore):
             stacked = [np.stack([np.asarray(j.args[i]) for j in chunk]
                                 + [np.asarray(e[i]) for e in embedded])
                        for i in range(len(key))]
-            padded, pad = pad_group(spec, stacked, width,
-                                    variant=variant)
-            res, measured = self._timed_call(fn, padded, device=device)
-            self.record_launch(spec.name, key, len(chunk) + len(riders),
-                               pad, variant.name, coalesced=len(riders),
-                               measured=measured, mesh=mesh,
-                               shard=rec_shard)
-            if mesh > 1:
-                self.observe_launch(spec, variant, key,
-                                    len(chunk) + len(riders) + pad,
-                                    measured, mesh=mesh)
-            else:
-                self.observe_launch(spec, variant, key,
-                                    len(chunk) + len(riders) + pad,
-                                    measured)
-            done = []
-            for i, job in enumerate(chunk):
-                job.out = res[i]
-                job.state = "done"
-                self.record_job(spec.name, job)
-                done.append(job)
-            for r, job in enumerate(riders):
-                small_shapes = tuple(np.shape(a) for a in job.args)
-                job.out = spec.coalesce.extract(res[len(chunk) + r],
-                                                small_shapes)
-                job.state = "done"
-                self.record_job(spec.name, job)
-                done.append(job)
         else:
-            done = self.dispatch_group(spec, fn, key, list(chunk),
-                                       variant=variant, mesh=mesh,
-                                       shard=rec_shard, device=device)
+            stacked = [np.stack([np.asarray(j.args[i]) for j in chunk])
+                       for i in range(len(chunk[0].args))]
+        padded, pad = pad_group(spec, stacked, width, variant=variant)
+        return self._supervise(pool, key, list(chunk), riders, padded,
+                               pad, t, mesh, shard)
+
+    def _scatter(self, pool: _LanePool, chunk: list, riders: tuple,
+                 res, t: float, bad: set | None = None) -> list:
+        """Write per-lane results back onto the jobs.  Lanes in ``bad``
+        (persistently non-finite output) fail their job terminally
+        instead — lanes are independent, so the good lanes stay exact
+        and are served."""
+        spec = pool.spec
+        done = []
+        for i, job in enumerate(list(chunk) + list(riders)):
+            if bad and i in bad:
+                job.state = "failed"
+                job.reason = "nonfinite_output"
+                job.finished_at = t
+                self.recorder.record_fail(spec.name, t, job.priority,
+                                          "nonfinite_output")
+                self._event("fail", t=t, pipeline=spec.name, seq=job.seq,
+                            reason="nonfinite_output")
+            else:
+                if i < len(chunk):
+                    job.out = res[i]
+                else:
+                    small = tuple(np.shape(a) for a in job.args)
+                    job.out = spec.coalesce.extract(res[i], small)
+                job.state = "done"
+                self.record_job(spec.name, job)
+            done.append(job)
+        return done
+
+    def _flush_event(self, pool: _LanePool, key: tuple, chunk: list,
+                     riders: tuple, variant, t: float, mesh: int,
+                     rec_shard: int, shard: int | None) -> None:
+        """Shard load accounting + the ``flush`` event.  mesh/shard
+        fields only appear on sharded muxes, so the single-device event
+        stream (golden traces) is unchanged."""
         if self.shards is not None:
-            cost = pool.dispatcher.price(key, width, mesh=mesh)
+            cost = pool.dispatcher.price(key, self.lanes * max(1, mesh),
+                                         mesh=mesh)
             if mesh > 1:
                 self.shards.note_all(cost)
             else:
                 self.shards.note(shard, cost)
-            # mesh/shard fields only appear on sharded muxes, so the
-            # single-device event stream (golden traces) is unchanged
-            self._event("flush", t=self.clock() if now is None else now,
-                        pipeline=spec.name, variant=variant.name,
-                        shape=_shape_label(key),
+            self._event("flush", t=t, pipeline=pool.spec.name,
+                        variant=variant.name, shape=_shape_label(key),
                         jobs=[j.seq for j in chunk],
                         coalesced=[j.seq for j in riders],
                         mesh=mesh, shard=rec_shard)
         else:
-            self._event("flush", t=self.clock() if now is None else now,
-                        pipeline=spec.name, variant=variant.name,
-                        shape=_shape_label(key),
+            self._event("flush", t=t, pipeline=pool.spec.name,
+                        variant=variant.name, shape=_shape_label(key),
                         jobs=[j.seq for j in chunk],
                         coalesced=[j.seq for j in riders])
-        return done
+
+    def _watchdog(self, pool: _LanePool, key: tuple, variant, width: int,
+                  mesh: int, measured: float, t: float) -> None:
+        """Predicted-cost watchdog: flag a launch whose measured wall
+        exceeds ``watchdog_ratio`` times the cost model's prediction.
+        Off at ratio 0.0 (the default) — it compares real wall-clock,
+        which golden traces must never depend on."""
+        if self.watchdog_ratio <= 0.0 or self.cost_model is None \
+                or not math.isfinite(measured):
+            return
+        predicted = pool.dispatcher.price(key, width, mesh=mesh)
+        if predicted > 0.0 and measured > self.watchdog_ratio * predicted:
+            self._watchdogs += 1
+            self._event("watchdog", t=t, pipeline=pool.spec.name,
+                        variant=variant.name, measured=_round(measured),
+                        predicted=_round(predicted))
+
+    def _supervise(self, pool: _LanePool, key: tuple, chunk: list,
+                   riders: tuple, padded: list, pad: int, t: float,
+                   mesh: int, shard: int | None) -> list:
+        """Supervised execution of one prepared launch: the attempt loop
+        plus the containment ladder (module docstring).  Returns the
+        terminal jobs — every ``chunk`` job comes back ``done`` or
+        ``failed``; detached riders come back still ``queued`` (the
+        policy dispatcher only dequeues terminal jobs)."""
+        spec = pool.spec
+        real = len(chunk) + len(riders)
+        width = self.lanes * max(1, mesh)
+        device = None
+        probing = None
+        if mesh == 1 and self.shards is not None:
+            # a quarantined shard owed a probe gets this launch; else
+            # place on the least-loaded healthy shard
+            while self._probe_ready and probing is None:
+                p = self._probe_ready.pop(0)
+                if self.shards.quarantined(p):
+                    shard = probing = p
+            if probing is None and (shard is None
+                                    or self.shards.quarantined(shard)):
+                shard = self.shards.pick(among=self.shards.healthy())
+            device = self.shards.devices[shard]
+        rec_shard = -1 if mesh > 1 else (shard if shard is not None
+                                         else 0)
+        tried: set[int] = set()
+        reason = "launch_failed"
+        failed = False
+        bad: list[int] = []
+        res = measured = None
+        for attempt in range(self.max_retries + 1):
+            # re-resolve each attempt: a mid-supervision demotion swaps
+            # the entry point (demotable variants share the spec's
+            # calling convention, so the prepared group is reusable)
+            if mesh > 1:
+                variant, fn = pool.dispatcher.resolve_sharded(key)
+            else:
+                variant, fn = pool.dispatcher.resolve(key)
+            ctx = {"pipeline": spec.name, "variant": variant.name,
+                   "width": width, "mesh": mesh,
+                   "shard": None if mesh > 1 else shard, "t": t}
+            failed, bad = False, []
+            try:
+                res, measured = self._timed_call(fn, padded,
+                                                 device=device,
+                                                 fault_ctx=ctx)
+            except InjectedLaunchError as e:
+                failed, reason = True, str(e) or "launch_failed"
+            except Exception as e:          # noqa: BLE001 — contained
+                failed = True
+                reason = f"launch_exception:{type(e).__name__}"
+            if not failed:
+                bad = [i for i in range(real)
+                       if not np.all(np.isfinite(res[i]))]
+                if not bad:
+                    # ---- success ----
+                    self.record_launch(spec.name, key, real, pad,
+                                       variant.name,
+                                       coalesced=len(riders),
+                                       measured=measured, mesh=mesh,
+                                       shard=rec_shard)
+                    if mesh > 1:
+                        self.observe_launch(spec, variant, key,
+                                            real + pad, measured,
+                                            mesh=mesh)
+                    else:
+                        self.observe_launch(spec, variant, key,
+                                            real + pad, measured)
+                    done = self._scatter(pool, chunk, riders, res, t)
+                    pool.dispatcher.note_success(key, variant)
+                    if mesh == 1 and self.shards is not None:
+                        if probing is not None:
+                            since = self.shards.quarantined_at[probing]
+                            down = self.shards.reinstate(probing, t,
+                                                         since)
+                            self._event("reinstate", t=t, shard=probing,
+                                        downtime=_round(down))
+                        else:
+                            self.shards.note_success(shard)
+                    self._watchdog(pool, key, variant, width, mesh,
+                                   measured, t)
+                    self._flush_event(pool, key, chunk, riders, variant,
+                                      t, mesh, rec_shard, shard)
+                    return done
+            # ---- failure accounting ----
+            if not failed:
+                reason = "nonfinite_output"
+            fallback = pool.dispatcher.note_failure(key, variant,
+                                                    self.demote_after)
+            if fallback is not None:
+                self._event("demote", t=t, pipeline=spec.name,
+                            shape=_shape_label(key),
+                            from_variant=variant.name,
+                            to_variant=fallback.name)
+            if mesh == 1 and self.shards is not None and failed:
+                if self.shards.note_failure(shard, t,
+                                            self.quarantine_after):
+                    self._event("quarantine", t=t, shard=shard,
+                                pipeline=spec.name, reason=reason)
+            if attempt < self.max_retries:
+                # backoff never blocks the scheduling clock: it is
+                # charged as debt against the shard's next-poll budget
+                backoff = self.retry_backoff * (2 ** attempt)
+                if mesh > 1:
+                    for s in range(len(self._fault_debt)):
+                        self._fault_debt[s] += backoff
+                else:
+                    self._fault_debt[shard if shard is not None
+                                     else 0] += backoff
+                self.recorder.record_retry(spec.name, t, reason)
+                self._event("retry", t=t, pipeline=spec.name,
+                            shape=_shape_label(key),
+                            jobs=[j.seq for j in chunk],
+                            attempt=attempt + 1, reason=reason,
+                            backoff=_round(backoff))
+                if mesh == 1 and self.shards is not None and failed:
+                    # re-place away from the shard that just failed
+                    probing = None
+                    tried.add(shard)
+                    pickable = ([s for s in self.shards.healthy()
+                                 if s not in tried]
+                                or self.shards.healthy()
+                                or list(range(self.shards.size)))
+                    shard = self.shards.pick(among=pickable)
+                    device = self.shards.devices[shard]
+                    rec_shard = shard
+        # ---- retries exhausted: contain, never propagate ----
+        if not failed and bad:
+            # executed fine but some real lanes are persistently
+            # non-finite: fail exactly those jobs, serve the rest
+            self.record_launch(spec.name, key, real, pad, variant.name,
+                               coalesced=len(riders), measured=measured,
+                               mesh=mesh, shard=rec_shard)
+            done = self._scatter(pool, chunk, riders, res, t,
+                                 bad=set(bad))
+            self._flush_event(pool, key, chunk, riders, variant, t,
+                              mesh, rec_shard, shard)
+            return done
+        if riders:
+            # a poisoned donor must never sink its host: detach the
+            # riders (they stay queued) and relaunch the host alone
+            self._event("retry", t=t, pipeline=spec.name,
+                        shape=_shape_label(key),
+                        jobs=[j.seq for j in chunk],
+                        action="detach_riders", reason=reason)
+            return self._launch(pool, key, chunk, riders=(), now=t,
+                                mesh=mesh, shard=None)
+        if mesh > 1:
+            # decompose the spanning slab into per-shard local chunks,
+            # isolating a sick shard instead of failing the whole slab
+            self._event("retry", t=t, pipeline=spec.name,
+                        shape=_shape_label(key),
+                        jobs=[j.seq for j in chunk],
+                        action="decompose", reason=reason)
+            done = []
+            for i in range(0, len(chunk), self.lanes):
+                done.extend(self._launch(pool, key,
+                                         chunk[i:i + self.lanes],
+                                         now=t, mesh=1))
+            return done
+        if len(chunk) > 1:
+            # bisect to isolate the poison lane
+            self._event("retry", t=t, pipeline=spec.name,
+                        shape=_shape_label(key),
+                        jobs=[j.seq for j in chunk],
+                        action="bisect", reason=reason)
+            mid = len(chunk) // 2
+            return (self._launch(pool, key, chunk[:mid], now=t)
+                    + self._launch(pool, key, chunk[mid:], now=t))
+        job = chunk[0]
+        job.state = "failed"
+        job.reason = reason
+        job.finished_at = t
+        self.recorder.record_fail(spec.name, t, job.priority, reason)
+        self._event("fail", t=t, pipeline=spec.name, seq=job.seq,
+                    reason=reason)
+        return [job]
 
     def _flush_bucket(self, pool: _LanePool, key: tuple, *,
                       full_only: bool,
@@ -542,7 +865,9 @@ class SolverMux(EngineCore):
         mesh-spanning launches first; the remainder goes per-shard."""
         jobs = pool.buckets[key]
         done: list[SolveJob] = []
-        if self.shards is not None:
+        if self.shards is not None and self.shards.all_healthy():
+            # spanning launches execute on every shard, so any
+            # quarantine degrades the mux to per-shard launches
             total = self.lanes * self.shards.size
             while len(jobs) >= total:
                 chunk, jobs = jobs[:total], jobs[total:]
@@ -603,6 +928,11 @@ class SolverMux(EngineCore):
         partials for hard-deadline buckets), and coalesces small jobs
         into larger buckets' free lanes — see the module docstring."""
         now = self.clock() if now is None else now
+        if self.shards is not None:
+            # quarantined shards whose sit-out has elapsed are owed one
+            # probe launch each this round (see _supervise)
+            self._probe_ready = self.shards.probe_due(now,
+                                                      self.probe_after)
         if self.policy is not None:
             return self._poll_policy(now)
         done: list[SolveJob] = []
@@ -685,6 +1015,7 @@ class SolverMux(EngineCore):
                 aged = pool.age.get(key, 0) >= pol.max_defer
                 rest = jobs
                 if self.shards is not None \
+                        and self.shards.all_healthy() \
                         and len(rest) >= self._split_threshold():
                     total = self.lanes * self.shards.size
                     sh_price = pool.dispatcher.price(
@@ -757,7 +1088,10 @@ class SolverMux(EngineCore):
         pol = self.policy
         n = 1 if self.shards is None else self.shards.size
         base = math.inf if pol.budget is None else pol.budget
-        budgets = [base] * n
+        # retry backoff charged by launch supervision since the last
+        # poll debits each shard's budget here (zero fault-free)
+        budgets = [base - debt for debt in self._fault_debt]
+        self._fault_debt = [0.0] * n
         admitted: list[_Candidate] = []
         voucher = True
         bumped: set[tuple] = set()
@@ -770,7 +1104,7 @@ class SolverMux(EngineCore):
                 return 0
             avail = budgets if extra is None else \
                 [b + e for b, e in zip(budgets, extra)]
-            return self.shards.pick(avail)
+            return self.shards.pick(avail, among=self.shards.healthy())
 
         def fits(cand, extra=None):
             avail = budgets if extra is None else \
@@ -988,7 +1322,8 @@ class SolverMux(EngineCore):
                 for s in range(len(refund)):
                     refund[s] -= cand.price
             else:
-                s = self.shards.pick(refund) \
+                s = self.shards.pick(refund,
+                                     among=self.shards.healthy()) \
                     if self.shards is not None else 0
                 if cand.price > refund[s]:
                     continue
@@ -1028,9 +1363,14 @@ class SolverMux(EngineCore):
             served = self._launch(pool, cand.key, cand.jobs,
                                   riders=cand.riders, now=now,
                                   mesh=cand.mesh, shard=cand.shard)
-            pool.remove(cand.key, cand.jobs)
+            # dequeue only terminal jobs: supervision may have detached
+            # riders back to the queue for a later round
+            pool.remove(cand.key,
+                        [j for j in cand.jobs if j.state != "queued"])
             by_key: dict[tuple, list] = {}
             for rider in cand.riders:
+                if rider.state == "queued":
+                    continue
                 by_key.setdefault(rider.shape_key(), []).append(rider)
             for dkey, riders in by_key.items():
                 pool.remove(dkey, riders)

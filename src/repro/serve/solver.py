@@ -36,8 +36,13 @@ class SolveJob:
     must never be shed and may preempt; ``"best_effort"`` jobs may be
     dropped once their deadline has expired.  ``state`` is the lifecycle
     marker — ``"queued"`` until a dispatch serves it (``"done"``, ``out``
-    filled) or the overload policy sheds it (``"dropped"``, terminal,
-    ``out`` stays ``None``).
+    filled), the overload policy sheds it (``"dropped"``, terminal,
+    ``out`` stays ``None``), or launch supervision gives up on it
+    (``"failed"``, terminal, ``out`` stays ``None``, ``reason`` set to
+    the structured failure reason — e.g. ``"nonfinite_input"`` rejected
+    at submit, ``"nonfinite_output"`` for a persistently poisoned lane,
+    or the exhausted-retries launch error).  A job is never silently
+    lost: every submitted job ends in exactly one of those states.
     """
 
     PRIORITIES = ("hard", "best_effort")
@@ -51,6 +56,7 @@ class SolveJob:
     seq: int = 0
     priority: str = "best_effort"
     state: str = "queued"
+    reason: str | None = None
 
     def shape_key(self) -> tuple:
         """Shape bucket: per-arg (shape, dtype) — jobs sharing it can be
@@ -91,6 +97,18 @@ class VariantDispatcher:
     same options-bound variant entry point in ``shard_map`` over the
     lane mesh, cached per (variant, arity) alongside the single-device
     cache.
+
+    **Demotion ladder.**  Launch supervision feeds per-bucket failure
+    streaks back through :meth:`note_failure` / :meth:`note_success`.
+    A variant that fails ``demote_after`` consecutive supervised
+    launches on one shape bucket is *banned* for that bucket: resolution
+    falls to the next applicable variant in registration order
+    (tiled -> blocked -> base), so a buggy fast path degrades gracefully
+    instead of failing the same jobs forever.  Only variants sharing the
+    spec's calling convention (``variant.filler is None``) are
+    demotable — a variant with its own filler (e.g. split-complex MMSE's
+    4 planes) takes different arguments, so there is nothing below it to
+    fall to and its jobs fail terminally instead.
     """
 
     def __init__(self, spec, options: dict | None = None, cost_model=None,
@@ -101,14 +119,59 @@ class VariantDispatcher:
         self.shards = shards
         self._fns: dict[str, object] = {}
         self._sharded_fns: dict[tuple, object] = {}
+        self._bans: dict[tuple, set[str]] = {}
+        self._fail_streaks: dict[tuple, int] = {}
+        self.demotions: list[dict] = []
+
+    def _dispatch(self, key: tuple):
+        """``dispatch_key`` with this dispatcher's per-bucket bans
+        applied: first applicable non-banned variant in registration
+        order, the spec's base otherwise (base is never banned)."""
+        shapes = tuple(tuple(s) for s, _ in key)
+        dtypes = tuple(np.dtype(dt) for _, dt in key)
+        banned = self._bans.get(key, ())
+        for v in self.spec.variants:
+            if v.name in banned:
+                continue
+            if v.when(shapes, dtypes):
+                return v
+        return self.spec.base
+
+    def demotable(self, key: tuple, variant) -> bool:
+        """True when a failing ``variant`` on ``key`` has somewhere to
+        fall: it is not the base and it shares the spec's calling
+        convention (``filler is None`` — same args, so the queued jobs
+        can re-resolve to the demoted variant unchanged)."""
+        return variant is not self.spec.base and variant.filler is None
+
+    def note_failure(self, key: tuple, variant,
+                     demote_after: int) -> object | None:
+        """Account one supervised-launch failure of ``variant`` on shape
+        bucket ``key``.  When the consecutive streak reaches
+        ``demote_after`` and the variant is demotable, ban it for this
+        bucket and return the variant resolution falls to (the mux turns
+        that into a ``demote`` event + alert); otherwise return None."""
+        sk = (key, variant.name)
+        self._fail_streaks[sk] = self._fail_streaks.get(sk, 0) + 1
+        if (demote_after > 0 and self._fail_streaks[sk] >= demote_after
+                and self.demotable(key, variant)):
+            self._bans.setdefault(key, set()).add(variant.name)
+            self._fail_streaks.pop(sk, None)
+            fallback = self._dispatch(key)
+            self.demotions.append({
+                "pipeline": self.spec.name, "key": key,
+                "from": variant.name, "to": fallback.name})
+            return fallback
+        return None
+
+    def note_success(self, key: tuple, variant) -> None:
+        self._fail_streaks.pop((key, variant.name), None)
 
     def resolve(self, key: tuple):
         """``key`` is a SolveJob.shape_key(): per-arg ((shape, dtype)).
         Returns the dispatched registry Variant and its jit'd, options-
         bound entry point."""
-        shapes = tuple(shape for shape, _ in key)
-        dtypes = tuple(np.dtype(dt) for _, dt in key)
-        variant = self.spec.dispatch_key(shapes, dtypes)
+        variant = self._dispatch(key)
         fn = self._fns.get(variant.name)
         if fn is None:
             fn = jax.jit(functools.partial(variant.fn, **self.options))
@@ -123,9 +186,7 @@ class VariantDispatcher:
             raise ValueError(
                 f"{self.spec.name!r} dispatcher has no lane shards; "
                 "sharded resolution needs a mesh")
-        shapes = tuple(shape for shape, _ in key)
-        dtypes = tuple(np.dtype(dt) for _, dt in key)
-        variant = self.spec.dispatch_key(shapes, dtypes)
+        variant = self._dispatch(key)
         cache_key = (variant.name, len(key))
         fn = self._sharded_fns.get(cache_key)
         if fn is None:

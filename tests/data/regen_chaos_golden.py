@@ -1,0 +1,26 @@
+"""Regenerate ``chaos_golden.json`` from ``fault_trace.json``.
+
+Run after any INTENTIONAL supervision/fault-handling change, then
+review the golden diff like any other code change:
+
+  PYTHONPATH=src python tests/data/regen_chaos_golden.py
+
+The replay parameters here must stay in sync with
+``tests/test_faults.py::test_golden_chaos_replay_event_sequence``.
+"""
+import json
+import pathlib
+
+from repro.launch.serve_solvers import run_chaos
+
+DATA = pathlib.Path(__file__).parent
+
+def main():
+    summary = run_chaos(DATA / "fault_trace.json")
+    out = DATA / "chaos_golden.json"
+    out.write_text(json.dumps(summary["events"], indent=1) + "\n")
+    kinds = sorted({e["event"] for e in summary["events"]})
+    print(f"wrote {out}: {len(summary['events'])} events, kinds={kinds}")
+
+if __name__ == "__main__":
+    main()

@@ -47,7 +47,8 @@ except ModuleNotFoundError:
 
 __all__ = [
     "HAVE_HYPOTHESIS", "fuzzed", "integers", "floats", "sampled",
-    "traces", "cost_streams", "TRACE_PIPELINES", "TRACE_SIZES",
+    "traces", "cost_streams", "fault_streams",
+    "TRACE_PIPELINES", "TRACE_SIZES",
     "spd_system", "tall_system", "channel_planes",
 ]
 
@@ -86,6 +87,16 @@ def cost_streams(max_len: int = 64, lo: float = 1e-9, hi: float = 10.0):
     return ("cost_streams", max_len, lo, hi)
 
 
+def fault_streams(max_fail: float = 0.3, max_nan: float = 0.2):
+    """Random small fault traces for the launch-supervision
+    no-silent-loss property (tests/test_faults.py): rate-based launch
+    failures + NaN output lanes plus an optional one-shard blackhole
+    window.  The trace dict feeds a seed-keyed
+    :class:`repro.serve.faults.FaultInjector`, so a failing example
+    shrinks to a fully reproducible chaos scenario."""
+    return ("fault_streams", max_fail, max_nan)
+
+
 def _resolve(spec):
     kind = spec[0]
     if kind == "integers":
@@ -102,6 +113,24 @@ def _resolve(spec):
             _st.integers(min_value=0, max_value=4),   # 0 = no deadline
             _st.integers(min_value=0, max_value=2))   # arrival gap
         return _st.lists(entry, min_size=1, max_size=spec[1])
+    if kind == "fault_streams":
+        blackhole = _st.lists(_st.fixed_dictionaries({
+            "shard": _st.integers(min_value=0, max_value=1),
+            "from_t": _st.floats(min_value=0.0, max_value=1.0,
+                                 allow_nan=False),
+            "until_t": _st.floats(min_value=1.0, max_value=4.0,
+                                  allow_nan=False),
+        }), max_size=1)
+        return _st.fixed_dictionaries({
+            "seed": _st.integers(min_value=0, max_value=2 ** 16),
+            "launch_fail_rate": _st.floats(min_value=0.0,
+                                           max_value=spec[1],
+                                           allow_nan=False),
+            "nan_rate": _st.floats(min_value=0.0, max_value=spec[2],
+                                   allow_nan=False),
+            "nan_lanes": _st.integers(min_value=1, max_value=2),
+            "blackhole": blackhole,
+        })
     if kind == "cost_streams":
         sample = _st.floats(min_value=spec[2], max_value=spec[3],
                             allow_nan=False, allow_infinity=False)

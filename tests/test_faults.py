@@ -1,0 +1,426 @@
+"""Fault-tolerant serving: seeded injection, launch supervision, and
+graceful degradation.
+
+Deterministic ManualClock scenarios for every containment path the
+supervision machinery promises:
+
+  * injector determinism (same trace + seed => identical fault stream)
+    and the disabled/default-off paths that keep golden traces pinned;
+  * transient launch failure -> bounded retry -> success, with the
+    backoff charged as admission debt rather than wall-clock;
+  * exhausted retries -> bisect isolates the poisoned job, cohort
+    results stay BIT-identical to a fault-free run;
+  * persistent NaN lane -> exactly that job fails (``nonfinite_output``),
+    the healthy lanes are served;
+  * admission-time validation: non-finite inputs are rejected at
+    ``submit`` and never contaminate a lane group;
+  * blackholed shard -> quarantine (capacity shrinks) -> probe ->
+    reinstatement, on the mesh;
+  * repeated variant failure -> demotion down the ladder
+    (blocked -> base) with event + alert;
+  * predicted-cost watchdog (opt-in) flags stalled launches;
+  * the bounded event ring buffer reports drops instead of growing
+    without bound;
+
+plus the golden chaos-replay regression (committed fault trace ->
+pinned event stream), the end-to-end chaos acceptance scenario
+(no hard job silently lost, quarantine + reinstate + demote all
+observed, hard attainment >= 80% of fault-free), and the
+hypothesis-fuzzed no-silent-loss property over random fault streams.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve_solvers import job_args, run_chaos
+from repro.serve import (CostModel, FaultInjector, InjectedLaunchError,
+                         ManualClock, SolverMux, global_config)
+
+from conftest import assert_close
+from strategies import fault_streams, fuzzed
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+mesh_ok = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="mesh tests need the 8-virtual-device session (conftest)")
+
+
+def chol_args(n=8, seed=0):
+    return job_args("cholesky_solve", n, 3, seed)
+
+
+def mk_mux(lanes=2, mesh_size=None, trace=None, cost_model=None,
+           fault_seed=0):
+    clock = ManualClock()
+    injector = FaultInjector(trace, seed=fault_seed) \
+        if trace is not None else None
+    mux = SolverMux(lanes=lanes, clock=clock, mesh_size=mesh_size,
+                    cost_model=cost_model, injector=injector)
+    return mux, clock
+
+
+def events_of(mux, *kinds):
+    return [e for e in mux.events if e["event"] in kinds]
+
+
+def reference_outputs(n_jobs, n=8):
+    """Outputs of the same jobs through a fault-free mux — the
+    bit-identical baseline degraded runs are judged against."""
+    mux, _ = mk_mux()
+    jobs = [mux.submit("cholesky_solve", *chol_args(n, seed=i))
+            for i in range(n_jobs)]
+    mux.run()
+    assert all(j.state == "done" for j in jobs)
+    return [j.out for j in jobs]
+
+
+# ---------------- injector ----------------
+
+def test_injector_deterministic_stream():
+    trace = {"launch_fail_rate": 0.3, "nan_rate": 0.2, "stall_rate": 0.1}
+    ctx = {"pipeline": "cholesky_solve", "variant": "base", "width": 4,
+           "mesh": 1, "shard": None, "t": 0.0}
+    def stream(seed):
+        inj = FaultInjector(trace, seed=seed)
+        return [inj.draw(ctx) for _ in range(64)]
+
+    draws = stream(7)
+    assert draws == stream(7)
+    assert draws != stream(8)
+    kinds = {f.kind for f in draws if f is not None}
+    assert kinds == {"raise", "nan", "stall"}
+    # a seed inside the trace wins over the constructor seed
+    inj = FaultInjector({**trace, "seed": 7}, seed=99)
+    assert [inj.draw(ctx) for _ in range(64)] == draws
+
+
+def test_injector_disabled_and_default_off():
+    trace = {"launch_fail_rate": 1.0}
+    off = FaultInjector(trace, enabled=False)
+    ctx = {"pipeline": "x", "variant": "base", "width": 2, "mesh": 1,
+           "shard": None, "t": 0.0}
+    assert all(off.draw(ctx) is None for _ in range(8))
+    # no REPRO_SERVE_FAULT_TRACE -> no injector at all: the serving
+    # stack is bit-identical to the pre-fault-injection code
+    assert FaultInjector.from_config() is None
+    mux, _ = mk_mux()
+    assert mux.injector is None
+
+
+def test_injector_targeted_counts_down():
+    inj = FaultInjector({"target": [{"pipeline": "p", "variant": "v",
+                                     "kind": "raise", "count": 2}]})
+    hit = {"pipeline": "p", "variant": "v", "width": 2, "mesh": 1,
+           "shard": None, "t": 0.0}
+    miss = {**hit, "variant": "other"}
+    assert inj.draw(miss) is None
+    assert inj.draw(hit).reason == "targeted_fault"
+    assert inj.draw(hit).reason == "targeted_fault"
+    assert inj.draw(hit) is None          # count exhausted
+
+
+# ---------------- retry / containment ----------------
+
+def test_transient_fault_retried_then_served():
+    trace = {"target": [{"pipeline": "cholesky_solve", "kind": "raise",
+                         "count": 1}]}
+    mux, _ = mk_mux(trace=trace)
+    jobs = [mux.submit("cholesky_solve", *chol_args(seed=i))
+            for i in range(2)]
+    mux.poll()
+    assert all(j.state == "done" for j in jobs)
+    retries = events_of(mux, "retry")
+    assert len(retries) == 1
+    assert retries[0]["attempt"] == 1
+    assert retries[0]["reason"] == "targeted_fault"
+    assert retries[0]["backoff"] > 0
+    snap = mux.metrics()
+    assert snap.total_retries == 1
+    assert snap.faults.retries == 1
+    assert snap.faults.failed_jobs == 0
+    # retried results are bit-identical to a fault-free run
+    for job, want in zip(jobs, reference_outputs(2)):
+        np.testing.assert_array_equal(np.asarray(job.out),
+                                      np.asarray(want))
+
+
+def test_exhausted_retries_bisect_isolates_poisoned_job():
+    mux, _ = mk_mux(trace={"raise_on_nonfinite_input": True})
+    good = mux.submit("cholesky_solve", *chol_args(seed=0))
+    bad = mux.submit("cholesky_solve", *chol_args(seed=1))
+    # corrupt AFTER admission: models data poisoned in flight, which
+    # submit-time validation cannot see
+    np.asarray(bad.args[0])[0, 0] = np.nan
+    mux.poll()
+    assert good.state == "done"
+    assert bad.state == "failed"
+    assert bad.reason == "nonfinite_input_crash"
+    assert bad.finished_at is not None
+    assert any(e.get("action") == "bisect"
+               for e in events_of(mux, "retry"))
+    fails = events_of(mux, "fail")
+    assert [e["seq"] for e in fails] == [bad.seq]
+    # the survivor is served bit-identical to a fault-free run
+    np.testing.assert_array_equal(np.asarray(good.out),
+                                  np.asarray(reference_outputs(1)[0]))
+    assert mux.metrics().faults.failed_jobs == 1
+
+
+def test_persistent_nan_lane_fails_only_that_job():
+    # count=3 poisons lane 1 on every attempt (1 try + 2 retries), so
+    # retries exhaust with the same sick lane -> lane isolation
+    trace = {"target": [{"pipeline": "cholesky_solve", "kind": "nan",
+                         "lane": 1, "count": 3}]}
+    mux, _ = mk_mux(trace=trace)
+    jobs = [mux.submit("cholesky_solve", *chol_args(seed=i))
+            for i in range(2)]
+    mux.poll()
+    assert jobs[0].state == "done"
+    assert jobs[1].state == "failed"
+    assert jobs[1].reason == "nonfinite_output"
+    assert all(e["reason"] == "nonfinite_output"
+               for e in events_of(mux, "retry"))
+    np.testing.assert_array_equal(np.asarray(jobs[0].out),
+                                  np.asarray(reference_outputs(1)[0]))
+    snap = mux.metrics()
+    assert snap.total_failed == 1
+    assert snap.faults.retries == 2
+
+
+def test_submit_rejects_nonfinite_input_cohort_clean():
+    mux, _ = mk_mux()
+    a, b = chol_args(seed=0)
+    a = np.array(a)
+    a[0, 0] = np.inf
+    poisoned = mux.submit("cholesky_solve", a, b)
+    assert poisoned.state == "failed"
+    assert poisoned.reason == "nonfinite_input"
+    assert mux.pending() == 0             # never enqueued
+    assert [e["reason"] for e in events_of(mux, "fail")] == \
+        ["nonfinite_input"]
+    # the cohort it would have shared a group with is untouched
+    jobs = [mux.submit("cholesky_solve", *chol_args(seed=10 + i))
+            for i in range(2)]
+    mux.run()
+    assert all(j.state == "done" for j in jobs)
+    assert mux.metrics().total_failed == 1
+
+
+# ---------------- shard health / degradation ----------------
+
+@mesh_ok
+def test_blackholed_shard_quarantined_then_reinstated():
+    trace = {"blackhole": [{"shard": 0, "from_t": 0.0, "until_t": 3.0}]}
+    mux, clock = mk_mux(mesh_size=4, trace=trace)
+    assert mux.total_lanes == 8
+    jobs = []
+    for t in range(3):                    # failures at t = 0, 1, 2
+        jobs += [mux.submit("cholesky_solve", *chol_args(seed=8 * t + i))
+                 for i in range(2)]
+        mux.poll()
+        clock.advance(1.0)
+    # every launch placed on shard 0 failed (blackhole), retries
+    # re-placed it on a healthy shard -> no job was lost
+    assert all(j.state == "done" for j in jobs)
+    quar = events_of(mux, "quarantine")
+    assert [e["shard"] for e in quar] == [0]
+    assert quar[0]["reason"] == "blackhole"
+    assert mux.total_lanes == 6           # capacity visibly shrinks
+    snap = mux.metrics()
+    assert snap.faults.quarantines == 1
+    assert snap.faults.quarantined_shards == (0,)
+    # quarantined at t=2, probe due at t=5 (probe_after=3.0); the
+    # blackhole window ended at t=3, so the probe launch survives
+    clock.advance(2.0)
+    probe_jobs = [mux.submit("cholesky_solve", *chol_args(seed=90 + i))
+                  for i in range(2)]
+    mux.poll()
+    assert all(j.state == "done" for j in probe_jobs)
+    rein = events_of(mux, "reinstate")
+    assert [e["shard"] for e in rein] == [0]
+    assert rein[0]["downtime"] == pytest.approx(3.0)
+    assert mux.total_lanes == 8
+    snap = mux.metrics()
+    assert snap.faults.reinstatements == 1
+    assert snap.faults.quarantined_shards == ()
+    assert snap.faults.time_to_recover == pytest.approx(3.0)
+
+
+def test_repeated_variant_failure_demotes_down_ladder():
+    # n=128 resolves the blocked cholesky variant; failing it twice
+    # (demote_after=2) demotes the bucket to base mid-supervision, and
+    # the third attempt succeeds on base
+    trace = {"target": [{"pipeline": "cholesky_solve",
+                         "variant": "blocked", "kind": "raise",
+                         "count": 2}]}
+    mux, _ = mk_mux(trace=trace)
+    jobs = [mux.submit("cholesky_solve", *chol_args(n=128, seed=i))
+            for i in range(2)]
+    mux.poll()
+    assert all(j.state == "done" for j in jobs)
+    demotes = events_of(mux, "demote")
+    assert len(demotes) == 1
+    assert demotes[0]["from_variant"] == "blocked"
+    assert demotes[0]["to_variant"] == "base"
+    assert [e["variant"] for e in events_of(mux, "flush")] == ["base"]
+    snap = mux.metrics()
+    assert snap.faults.demotions == 1
+    assert snap.faults.alerts == ("demote:cholesky_solve:blocked->base",)
+    # the demotion sticks: later traffic on the bucket launches base
+    more = [mux.submit("cholesky_solve", *chol_args(n=128, seed=9 + i))
+            for i in range(2)]
+    mux.poll()
+    assert all(j.state == "done" for j in more)
+    assert [e["variant"] for e in events_of(mux, "flush")] == \
+        ["base", "base"]
+
+
+def test_watchdog_flags_stalled_launch(monkeypatch):
+    monkeypatch.setattr(global_config, "watchdog_ratio", 5.0)
+    # every launch's measured wall-clock is inflated by 10 s — far
+    # beyond 5x any predicted cost — but the jobs still complete
+    trace = {"stall_rate": 1.0, "stall_s": 10.0}
+    mux, _ = mk_mux(trace=trace, cost_model=CostModel())
+    jobs = [mux.submit("cholesky_solve", *chol_args(seed=i))
+            for i in range(2)]
+    mux.poll()
+    assert all(j.state == "done" for j in jobs)
+    flags = events_of(mux, "watchdog")
+    assert len(flags) == 1
+    assert flags[0]["measured"] > flags[0]["predicted"]
+    assert mux.metrics().faults.watchdog_flags == 1
+
+
+def test_watchdog_off_by_default():
+    trace = {"stall_rate": 1.0, "stall_s": 10.0}
+    mux, _ = mk_mux(trace=trace, cost_model=CostModel())
+    jobs = [mux.submit("cholesky_solve", *chol_args(seed=i))
+            for i in range(2)]
+    mux.poll()
+    assert all(j.state == "done" for j in jobs)
+    assert events_of(mux, "watchdog") == []
+    assert mux.metrics().faults.watchdog_flags == 0
+
+
+# ---------------- event ring buffer ----------------
+
+def test_event_buffer_bounded_and_drops_reported(monkeypatch):
+    monkeypatch.setattr(global_config, "event_cap", 5)
+    mux, _ = mk_mux()
+    for i in range(16):                   # 8 flush events > cap
+        mux.submit("cholesky_solve", *chol_args(seed=i))
+        if i % 2 == 1:
+            mux.poll()
+    assert len(mux.events) == 5
+    drained = mux.drain_events()
+    assert drained[0]["event"] == "events_dropped"
+    assert drained[0]["count"] == 3
+    assert len(drained) == 6
+    # the drop counter resets with the drain: no stale re-reporting
+    mux.submit("cholesky_solve", *chol_args(seed=99))
+    mux.run()
+    again = mux.drain_events()
+    assert [e["event"] for e in again] == ["flush"]
+
+
+# ---------------- chaos replay ----------------
+
+@pytest.fixture(scope="module")
+def chaos():
+    faulted = run_chaos(str(DATA / "fault_trace.json"))
+    clean = run_chaos(None)
+    return faulted, clean
+
+
+@mesh_ok
+def test_golden_chaos_replay_event_sequence(chaos):
+    """The committed fault trace replays to the committed event stream,
+    byte for byte.  Regenerate INTENTIONAL changes with
+    tests/data/regen_chaos_golden.py and review the diff."""
+    faulted, _ = chaos
+    golden = json.loads((DATA / "chaos_golden.json").read_text())
+    assert json.loads(json.dumps(faulted["events"])) == golden
+
+
+@mesh_ok
+def test_chaos_acceptance(chaos):
+    """The ISSUE acceptance scenario: ~10% launch failures + NaN lanes
+    + one blackholed shard at mesh=4.  No hard job is silently lost,
+    the dead shard is quarantined and later reinstated, at least one
+    variant demotion fires, and hard-SLO attainment stays >= 80% of the
+    fault-free run."""
+    faulted, clean = chaos
+    assert faulted["faulted"] and not clean["faulted"]
+    assert faulted["hard_lost"] == 0
+    assert faulted["pending"] == 0
+    assert faulted["retries"] > 0
+    assert faulted["quarantines"] >= 1
+    assert faulted["reinstatements"] >= 1
+    assert faulted["demotions"] >= 1
+    assert np.isfinite(faulted["time_to_recover"])
+    assert any(a.startswith("demote:") for a in faulted["alerts"])
+    assert clean["failed"] == 0 and clean["retries"] == 0
+    assert faulted["attainment_hard"] >= 0.8 * clean["attainment_hard"]
+    # every submitted job reached a terminal state
+    assert faulted["done"] + faulted["failed"] + faulted["dropped"] == \
+        faulted["jobs"]
+
+
+# ---------------- fuzzed invariant ----------------
+
+def _check_no_silent_loss(trace):
+    clock = ManualClock()
+    mux = SolverMux(lanes=2, clock=clock, mesh_size=2,
+                    injector=FaultInjector(trace))
+    jobs = []
+    for t in range(5):
+        if t < 4:
+            jobs.append(mux.submit(
+                "cholesky_solve", *chol_args(seed=2 * t),
+                deadline=clock() + 2.0, priority="hard"))
+            jobs.append(mux.submit(
+                "cholesky_solve", *chol_args(seed=2 * t + 1),
+                priority="best_effort"))
+        mux.poll()
+        clock.advance(1.0)
+    mux.run()
+    assert mux.pending() == 0
+    for j in jobs:
+        assert j.state in ("done", "failed"), j.state
+        if j.state == "failed":
+            assert j.reason, "failed without a structured reason"
+            assert j.finished_at is not None
+
+
+@mesh_ok
+@fuzzed(max_examples=15, trace=fault_streams())
+def test_fault_streams_no_silent_loss_fuzzed(trace):
+    """Under ANY random fault stream — launch failures, NaN lanes, a
+    blackholed shard — every job reaches a terminal state and every
+    failure carries a structured reason: faults degrade service, they
+    never lose work silently."""
+    _check_no_silent_loss(trace)
+
+
+@pytest.mark.parametrize("trace", [
+    {},
+    {"launch_fail_rate": 0.25, "seed": 3},
+    {"nan_rate": 0.2, "nan_lanes": 2, "seed": 5},
+    {"launch_fail_rate": 0.15, "nan_rate": 0.1,
+     "blackhole": [{"shard": 1, "from_t": 0.0, "until_t": 3.0}]},
+])
+@mesh_ok
+def test_fault_streams_no_silent_loss_grid(trace):
+    """Deterministic grid twin of the fuzzed property (carries the
+    coverage when hypothesis is absent)."""
+    _check_no_silent_loss(trace)
+
+
+def test_injected_error_is_runtime_error():
+    # supervision catches it specifically; callers outside the mux see
+    # a plain RuntimeError subclass
+    assert issubclass(InjectedLaunchError, RuntimeError)

@@ -306,3 +306,14 @@ def test_engine_shim_exports_mux_and_deprecates():
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         from repro.serve.engine import PipelineEngine  # noqa: F401
+    # the launch-supervision seam rides along: the shim's SolverMux
+    # accepts an injector, and importing the faults module directly
+    # (as mux.py now does) never trips the deprecation warning
+    from repro.serve import FaultInjector
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        from repro.serve.faults import FaultInjector as direct
+    assert direct is FaultInjector
+    mux = engine.SolverMux(lanes=2, clock=ManualClock(),
+                           injector=FaultInjector({}))
+    assert isinstance(mux.injector, FaultInjector)

@@ -417,3 +417,40 @@ def run_slo() -> None:
     else:
         emit("serve_slo/faults/skipped", 0.0,
              f"needs 4 devices, have {n_dev}", unit="count")
+
+    # ---- served pipeline DAG sweep: the canonical PUSCH-receiver
+    # trace (same generator as the committed golden trace) replayed
+    # stage-independent vs stage-chained on the virtual clock, plus the
+    # committed mid-DAG fault trace (channel-estimate stage raises
+    # twice, absorbed by launch supervision).  End-to-end latencies are
+    # in exact virtual ticks; rows gated by check_bench_json ----
+    import pathlib as _pathlib
+
+    from repro.launch.serve_solvers import run_pusch
+
+    header("serve SLO DAG: PUSCH receiver, staged vs stage-chained, "
+           "mid-DAG fault")
+    staged = run_pusch(False, ticks=4)
+    chained = run_pusch(True, ticks=4)
+    fault_path = (_pathlib.Path(__file__).parent.parent
+                  / "tests" / "data" / "pusch_fault_trace.json")
+    faulted_dag = run_pusch(False, ticks=4, fault_trace=str(fault_path))
+    for tag, s in (("staged", staged), ("chained", chained)):
+        emit(f"serve_slo/dag/{tag}/e2e_p50", s["e2e_p50"],
+             f"dags={s['pusch_dags']},done={s['done']},"
+             f"failed={s['failed']},dropped={s['dropped']},"
+             f"launches={s['launches']}", unit="count")
+        emit(f"serve_slo/dag/{tag}/e2e_p99", s["e2e_p99"],
+             f"dags={s['pusch_dags']},launches={s['launches']}",
+             unit="count")
+    emit("serve_slo/dag/chained_speedup",
+         staged["e2e_p50"] / chained["e2e_p50"],
+         f"staged_p50={staged['e2e_p50']:.1f},"
+         f"chained_p50={chained['e2e_p50']:.1f},"
+         f"staged_launches={staged['launches']},"
+         f"chained_launches={chained['launches']}", unit="ratio")
+    emit("serve_slo/dag/faults/hard_lost",
+         float(faulted_dag["hard_lost"]),
+         f"retries={faulted_dag['retries']},"
+         f"done={faulted_dag['done']},dags={faulted_dag['dags']},"
+         f"failed_jobs={faulted_dag['failed_jobs']}", unit="count")

@@ -26,6 +26,12 @@ deterministic virtual-clock trace, so this is exact, not flaky), and
 the payload's ``sharded`` calibration rows must include measured
 mesh > 1 launches.
 
+The served-DAG sweep is gated as well: ``serve_slo/dag/*`` rows must
+carry the staged and stage-chained PUSCH end-to-end latencies (exact
+virtual ticks), chained strictly below staged at the same budget, and
+the mid-DAG fault replay must report zero hard DAGs lost with at least
+one supervised retry.
+
 So is the fault-tolerance chaos replay: the ``serve_slo/faults/*``
 rows must show zero silently-lost hard jobs, at least one quarantine,
 reinstatement, and variant demotion, and a hard-attainment ratio of at
@@ -204,6 +210,44 @@ def check(path: str) -> None:
             f"chaos replay never exercised {counter}: "
             f"{contain['derived']}")
 
+    # Served-DAG rows: the PUSCH-receiver trace must have been replayed
+    # staged AND stage-chained, chaining must strictly reduce end-to-end
+    # latency at the same budget (the fused channel-estimate->equalize
+    # tail removes one scheduling round trip — virtual clock, exact),
+    # and the mid-DAG fault replay must have lost zero hard DAGs.
+    dag_staged = rows.get("serve_slo/dag/staged/e2e_p50")
+    dag_chained = rows.get("serve_slo/dag/chained/e2e_p50")
+    dag_speedup = rows.get("serve_slo/dag/chained_speedup")
+    dag_lost = rows.get("serve_slo/dag/faults/hard_lost")
+    assert dag_staged and dag_chained and dag_speedup and dag_lost, (
+        "serve_slo DAG rows missing — regenerate with "
+        "`--only variants,serve_slo --json-out ...`")
+    for r in (dag_staged, dag_chained):
+        assert r["unit"] == "count" and r["us_per_call"] > 0, (
+            f"DAG e2e latency row {r['name']!r} must be positive ticks: "
+            f"{r['us_per_call']} ({r['unit']})")
+        assert rows.get(r["name"].replace("p50", "p99")), (
+            f"DAG e2e p99 row missing next to {r['name']!r}")
+        fields = dict(kv.split("=") for kv in r["derived"].split(","))
+        assert fields.get("failed") == "0" and \
+            fields.get("dropped") == "0", (
+                f"DAG replay lost work: {r['derived']}")
+    assert dag_chained["us_per_call"] < dag_staged["us_per_call"], (
+        f"stage-chained e2e p50 ({dag_chained['us_per_call']} ticks) "
+        f"must be strictly below stage-independent "
+        f"({dag_staged['us_per_call']} ticks)")
+    assert dag_speedup["unit"] == "ratio" and \
+        dag_speedup["us_per_call"] > 1.0, (
+            f"DAG chained speedup must exceed 1.0: "
+            f"{dag_speedup['us_per_call']}")
+    assert dag_lost["unit"] == "count" and \
+        dag_lost["us_per_call"] == 0.0, (
+            f"mid-DAG fault replay silently lost hard DAGs: "
+            f"{dag_lost['us_per_call']} ({dag_lost['derived']})")
+    fields = dict(kv.split("=") for kv in dag_lost["derived"].split(","))
+    assert int(fields["retries"]) >= 1, (
+        f"mid-DAG fault trace never fired: {dag_lost['derived']}")
+
     sharded = payload.get("sharded", [])
     spanning = [rec for rec in sharded if rec.get("mesh", 1) > 1]
     assert spanning, ("payload 'sharded' section has no mesh > 1 "
@@ -219,7 +263,8 @@ def check(path: str) -> None:
           f"{len(live)} drift pairs observed, sharded mesh4 "
           f"{thr[4] / thr[1]:.1f}x mesh1 ({len(spanning)} spanning "
           f"calibration rows), chaos hard_lost=0 at attainment ratio "
-          f"{ratio['us_per_call']:.3f}")
+          f"{ratio['us_per_call']:.3f}, DAG chained "
+          f"{dag_speedup['us_per_call']:.2f}x staged with hard_lost=0")
 
 
 if __name__ == "__main__":

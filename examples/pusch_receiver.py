@@ -1,0 +1,100 @@
+"""End-to-end 5G PUSCH receiver served as a pipeline DAG.
+
+The flagship ordered-parallelism scenario: the uplink receive chain
+
+  FFT demod -> channel estimate (pilots) -> MMSE Gram/equalize
+
+is registered as the ``pusch_receive`` DAG (``repro.kernels``), whose
+stages the ``SolverMux`` schedules as ordinary lane-pool jobs with the
+producer->consumer edges enforced by the DAG frontier: a stage is
+submitted the moment every stage it consumes has produced its output
+buffer.  Criticality ordering comes from ``core/criticality.plan_split``
+over the stages' modeled FLOPs — at equal deadline the critical channel
+estimate is admitted ahead of slack stages regardless of arrival order.
+
+Two execution shapes of the same DAG:
+
+* **staged** — three launches with stage-output buffer handoffs;
+* **chained** — the channel-estimate -> equalize tail fused
+  lane-resident in one ``pallas_call`` (VMEM handoff, one scheduling
+  round trip saved), declared via ``DagSpec.chained``.
+
+Also runs the non-wireless ``svd_solve`` DAG (SVD factor -> apply) to
+show the same machinery on a generic multi-stage workload, and replays
+the committed mid-DAG fault trace to show a failing stage retrying
+through launch supervision without orphaning its downstream stages.
+
+Run:  PYTHONPATH=src python examples/pusch_receiver.py
+"""
+import pathlib
+
+import numpy as np
+
+from repro import kernels as K
+from repro.launch.xla_env import force_host_device_count
+
+force_host_device_count(8)
+
+from repro.launch.serve_solvers import run_pusch  # noqa: E402
+from repro.serve import CostModel, ManualClock, OverloadPolicy, \
+    SolverMux  # noqa: E402
+
+FAULT_TRACE = (pathlib.Path(__file__).parent.parent
+               / "tests" / "data" / "pusch_fault_trace.json")
+
+
+def one_dag_walkthrough():
+    """Submit a single PUSCH DAG and narrate its stage schedule."""
+    spec = K.get_dag("pusch_receive")
+    print(f"DAG {spec.name}: stages "
+          f"{[s.name for s in spec.stage_list()]}")
+    args = spec.make_case(np.random.default_rng(0), 8)
+    crit, slack = spec.criticality(tuple(np.shape(a) for a in args))
+    print(f"  criticality (plan_split @ {spec.crit_threshold}): "
+          f"critical={crit} slack={slack}")
+
+    clock = ManualClock()
+    mux = SolverMux(lanes=4, max_wait=0.0, clock=clock,
+                    policy=OverloadPolicy(budget=None,
+                                          cost_model=CostModel()))
+    dag = mux.submit_dag("pusch_receive", *args, priority="hard",
+                         deadline=clock() + 8.0)
+    while dag.state in ("queued", "running"):
+        mux.poll()
+        clock.advance(1.0)
+    mux.run()
+    print(f"  -> {dag.state} in {dag.finished_at - dag.submitted_at:.0f} "
+          f"virtual ticks")
+    for e in mux.drain_events():
+        if e["event"].startswith("dag"):
+            extra = e.get("stage") or e.get("latency") or ""
+            print(f"     t={e['t']:>4} {e['event']:<10} {extra}")
+    # the served end-to-end output equals the composed reference chain
+    want = spec.oracle(*args)
+    err = np.max(np.abs(np.asarray(dag.out) - want)) \
+        / (np.max(np.abs(want)) + 1e-12)
+    print(f"  e2e rel err vs composed oracle: {err:.2e}")
+
+
+def main():
+    one_dag_walkthrough()
+
+    print("\ncanonical trace, stage-independent vs stage-chained:")
+    staged = run_pusch(False, ticks=4)
+    chained = run_pusch(True, ticks=4)
+    for s in (staged, chained):
+        mode = "chained" if s["chained"] else "staged"
+        print(f"  [{mode}] dags={s['dags']} done={s['done']} "
+              f"e2e p50={s['e2e_p50']:.1f} ticks "
+              f"launches={s['launches']}")
+    print(f"  stage-chained speedup: "
+          f"{staged['e2e_p50'] / chained['e2e_p50']:.2f}x e2e p50")
+
+    print("\nmid-DAG stage fault (channel estimate raises twice):")
+    faulted = run_pusch(False, ticks=4, fault_trace=str(FAULT_TRACE))
+    print(f"  retries={faulted['retries']} done={faulted['done']}/"
+          f"{faulted['dags']} hard_lost={faulted['hard_lost']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -199,6 +199,17 @@ def command_count(pattern: StreamDescriptor, capability: str,
     if capability not in _CAPABILITY_ORDER:
         raise ValueError(f"unknown capability {capability!r}")
 
+    # degenerate stream: a pattern with no iterations at all (e.g. an
+    # inductive inner dim with inner_base=0 and non-positive stretch, or
+    # a zero outer trip) needs no commands — without this guard the V
+    # path's max(1, ...) and the _supports fast path both claim 1.
+    # Individual empty rows inside a non-empty decomposed pattern still
+    # charge one command each (the core issues the per-outer-iteration
+    # command before the zero trip count is known — the paper's 3+5n
+    # accounting), which the max(1, ...) below preserves.
+    if pattern.length() == 0:
+        return 0
+
     if capability == "V":
         total = 0
         if pattern.ndim == 1:
@@ -233,7 +244,7 @@ def command_count(pattern: StreamDescriptor, capability: str,
             base=pattern.base + d0.stride * j,
             name=pattern.name,
         )
-        total += command_count(sub, capability, vector_width)
+        total += max(1, command_count(sub, capability, vector_width))
     return total
 
 

@@ -109,6 +109,48 @@ def mmse_equalize_split(hr: jax.Array, hi: jax.Array, yr: jax.Array,
                            axis=-2).astype(hr.dtype)
 
 
+def channel_estimate(xp: jax.Array, yp: jax.Array, *,
+                     ridge: float = 1e-3) -> jax.Array:
+    """Regularized LS channel estimate from pilots: solve
+    (Xp Xp^T + ridge I) Z = Xp Yp^T, H = Z^T.
+    xp: (B,N,P) known pilots, yp: (B,M,P) observations -> (B,M,N)."""
+    n = xp.shape[-2]
+    g = jnp.einsum("bnp,bmp->bnm", xp, xp) \
+        + ridge * jnp.eye(n, dtype=xp.dtype)
+    rhs = jnp.einsum("bnp,bmp->bnm", xp, yp)
+    return jnp.swapaxes(jnp.linalg.solve(g, rhs), -1, -2)
+
+
+def pusch_chain(xp: jax.Array, yp: jax.Array, y: jax.Array, *,
+                ridge: float = 1e-3, sigma2: float = 0.1) -> jax.Array:
+    """Channel-estimate -> MMSE equalize, the unfused two-stage path.
+    xp: (B,N,P), yp: (B,M,P), y: (B,M,K) -> (B,N,K)."""
+    return mmse_equalize(channel_estimate(xp, yp, ridge=ridge), y,
+                         sigma2=sigma2)
+
+
+def svd_apply(f: jax.Array, b: jax.Array, *, lam: float = 1e-3
+              ) -> jax.Array:
+    """Pseudo-inverse apply from a packed (B, M+N+1, N) factor buffer
+    [U; V; s]: x = V diag(s / (s^2 + lam)) U^T b.  b: (B,M,K)."""
+    n = f.shape[-1]
+    m = f.shape[-2] - n - 1
+    u, v, s = f[:, :m], f[:, m:m + n], f[:, m + n]
+    w = jnp.einsum("bmn,bmk->bnk", u, b)
+    w = (s / (s * s + lam))[:, :, None] * w
+    return jnp.einsum("bnj,bjk->bnk", v, w)
+
+
+def ridge_solve(a: jax.Array, b: jax.Array, *, lam: float = 1e-3
+                ) -> jax.Array:
+    """Closed-form ridge regression x = (A^T A + lam I)^{-1} A^T b — the
+    factor-free ground truth for the svd_factor -> svd_apply DAG (the
+    composition is invariant to SVD sign/order ambiguity)."""
+    n = a.shape[-1]
+    g = jnp.einsum("bmi,bmj->bij", a, a) + lam * jnp.eye(n, dtype=a.dtype)
+    return jnp.linalg.solve(g, jnp.einsum("bmn,bmk->bnk", a, b))
+
+
 # ---------------- dense / DSP ----------------
 
 def gemm(x: jax.Array, y: jax.Array) -> jax.Array:
@@ -125,6 +167,14 @@ def fft(x_re: jax.Array, x_im: jax.Array):
     """Batched complex FFT. (B, N) each -> (re, im)."""
     z = jnp.fft.fft(x_re + 1j * x_im.astype(jnp.complex64))
     return jnp.real(z).astype(x_re.dtype), jnp.imag(z).astype(x_im.dtype)
+
+
+def pusch_fft(xr: jax.Array, xi: jax.Array) -> jax.Array:
+    """OFDM demod stage oracle: per-antenna FFT over the last axis,
+    packed into stacked planes.  (B, A, NF) re/im -> (B, 2, A, NF)."""
+    z = jnp.fft.fft(xr + 1j * xi.astype(jnp.complex64))
+    return jnp.stack([jnp.real(z).astype(xr.dtype),
+                      jnp.imag(z).astype(xi.dtype)], axis=1)
 
 
 # ---------------- LM-side kernels ----------------

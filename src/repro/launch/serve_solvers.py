@@ -448,6 +448,142 @@ def run_chaos(fault_trace: str | dict | None, *, mesh_size: int = 4,
     }
 
 
+# ---------------- served PUSCH DAG (bench + golden tests) -------------
+
+def dag_job_args(dag: str, n: int, seed: int) -> tuple:
+    """Deterministic per-DAG-job problem arrays, keyed by seed — the
+    form committed DAG traces store jobs in (never raw arrays)."""
+    return K.get_dag(dag).make_case(np.random.default_rng(seed), n)
+
+
+def pusch_trace(ticks: int, seed: int = 0, *,
+                chained: bool = False) -> list[dict]:
+    """The canonical served-DAG workload: one hard ``pusch_receive``
+    DAG per tick plus one best-effort ``svd_solve`` DAG every other
+    tick (the generality traffic).  The PUSCH deadlines are *staggered
+    to the same absolute tick* in pairs (tick t gets ``8 - t % 2``
+    ticks), so consecutive DAGs compete at EQUAL deadline while sitting
+    at different stages — the window where criticality-first admission
+    is observable: the later DAG's critical channel-estimate stage must
+    flush ahead of the earlier DAG's slack equalize stage (plain
+    FIFO/seq order would invert that), which the golden event stream
+    pins."""
+    trace, seq = [], 0
+    for t in range(ticks):
+        trace.append(dict(tick=t, dag="pusch_receive", n=8,
+                          priority="hard",
+                          deadline_ticks=8.0 - t % 2,
+                          chained=chained,
+                          seed=seed * 100003 + seq)); seq += 1
+        if t % 2 == 0:
+            trace.append(dict(tick=t, dag="svd_solve", n=8,
+                              priority="best_effort",
+                              deadline_ticks=12.0, chained=False,
+                              seed=seed * 100003 + seq)); seq += 1
+    return trace
+
+
+def replay_pusch(trace: list[dict], *, lanes: int = 4, tick: float = 1.0,
+                 drain_ticks: int = 6, injector=None,
+                 mesh_size: int | None = None):
+    """Replay a committed DAG trace on a virtual clock: submit each
+    tick's DAGs, ``poll`` once per tick (each poll serves the ready
+    stage frontier and advances the DAGs), keep polling ``drain_ticks``
+    empty ticks, then ``run()``.  Returns ``(mux, dag_jobs)`` — the
+    mux's ``events`` list is the stage-scheduling decision sequence the
+    golden file pins."""
+    clock = ManualClock()
+    mux = SolverMux(lanes=lanes, max_wait=0.0, clock=clock,
+                    policy=OverloadPolicy(budget=None,
+                                          cost_model=CostModel()),
+                    mesh_size=mesh_size, injector=injector)
+    by_tick: dict[int, list[dict]] = {}
+    for entry in trace:
+        by_tick.setdefault(int(entry["tick"]), []).append(entry)
+    last = max(by_tick) if by_tick else -1
+    dags = []
+    for t in range(last + 1 + drain_ticks):
+        for e in by_tick.get(t, ()):
+            deadline = e.get("deadline_ticks")
+            dags.append(mux.submit_dag(
+                e["dag"], *dag_job_args(e["dag"], e["n"], e["seed"]),
+                deadline=(None if deadline is None
+                          else clock() + deadline * tick),
+                priority=e.get("priority", "best_effort"),
+                chained=e.get("chained", False)))
+        mux.poll()
+        clock.advance(tick)
+    mux.run()
+    return mux, dags
+
+
+def dag_hard_lost(dags) -> int:
+    """Hard DAGs (or their stages) left unaccounted: a hard DAG is LOST
+    iff it reached no terminal state, or any submitted stage job is
+    neither terminal nor explicitly cancelled — the acceptance gate is
+    zero (a mid-DAG fault must cascade cleanly, never orphan)."""
+    lost = 0
+    for d in dags:
+        if d.priority != "hard":
+            continue
+        if d.state not in ("done", "failed", "dropped"):
+            lost += 1
+            continue
+        for stage in d.spec.stage_list(chained=d.chained):
+            sj = d.stages.get(stage.name)
+            if sj == "cancelled":
+                continue
+            if sj is None or sj.state not in ("done", "failed",
+                                              "dropped"):
+                lost += 1
+                break
+    return lost
+
+
+def run_pusch(chained: bool, *, ticks: int = 4, lanes: int = 4,
+              seed: int = 0, fault_trace: str | dict | None = None,
+              fault_seed: int = 0) -> dict:
+    """Run the canonical PUSCH DAG trace end to end — stage-independent
+    (``chained=False``: FFT -> channel-estimate -> equalize as three
+    launches with buffer handoffs) or stage-chained (``chained=True``:
+    the channel-estimate->equalize tail fused lane-resident in one
+    ``pallas_call``) — and summarize the end-to-end SLO view the
+    ``serve_slo/dag/*`` benchmark rows gate: e2e p50/p99 latency in
+    virtual ticks, launch counts, and (under an injected fault trace)
+    the containment observables with ``hard_lost`` required zero."""
+    import os
+
+    from repro.serve import FaultInjector
+    if fault_trace is None:
+        injector = None
+    elif isinstance(fault_trace, (str, os.PathLike)):
+        injector = FaultInjector.from_json(fault_trace, seed=fault_seed)
+    else:
+        injector = FaultInjector(fault_trace, seed=fault_seed)
+    trace = pusch_trace(ticks, seed, chained=chained)
+    mux, dags = replay_pusch(trace, lanes=lanes, injector=injector)
+    snap = mux.metrics()
+    pstats = snap.dags.get("pusch_receive")
+    pusch = [d for d in dags if d.dag == "pusch_receive"]
+    return {
+        "chained": chained,
+        "faulted": injector is not None,
+        "dags": len(dags),
+        "pusch_dags": len(pusch),
+        "done": sum(1 for d in dags if d.state == "done"),
+        "failed": sum(1 for d in dags if d.state == "failed"),
+        "dropped": sum(1 for d in dags if d.state == "dropped"),
+        "hard_lost": dag_hard_lost(dags),
+        "e2e_p50": pstats.latency.p50 if pstats else math.nan,
+        "e2e_p99": pstats.latency.p99 if pstats else math.nan,
+        "launches": snap.total_launches,
+        "retries": snap.faults.retries,
+        "failed_jobs": snap.faults.failed_jobs,
+        "pending": mux.pending(),
+        "events": mux.drain_events(),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=8,
@@ -491,6 +627,14 @@ def main(argv=None):
                          "trace injected) instead of the TTI replay and "
                          "print the supervision observables (requires "
                          "--fault-trace)")
+    ap.add_argument("--pusch", action="store_true",
+                    help="serve the canonical PUSCH-receiver DAG trace "
+                         "(staged vs stage-chained, criticality-ordered "
+                         "admission) instead of the TTI replay and print "
+                         "the end-to-end DAG observables; combine with "
+                         "--fault-trace for a mid-DAG stage fault")
+    ap.add_argument("--ticks", type=int, default=4,
+                    help="virtual ticks in the --pusch DAG trace")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.budget_us is not None and not args.policy:
@@ -500,6 +644,28 @@ def main(argv=None):
     if args.chaos and args.fault_trace is None:
         ap.error("--chaos requires --fault-trace")
     sizes = [int(s) for s in args.sizes.split(",")]
+
+    if args.pusch:
+        staged = run_pusch(False, ticks=args.ticks, lanes=args.lanes,
+                           seed=args.seed, fault_trace=args.fault_trace,
+                           fault_seed=args.fault_seed or 0)
+        chained = run_pusch(True, ticks=args.ticks, lanes=args.lanes,
+                            seed=args.seed)
+        for s in (staged, chained):
+            mode = "chained" if s["chained"] else "staged"
+            fault = " +faults" if s["faulted"] else ""
+            print(f"pusch dag [{mode}{fault}]: dags={s['dags']} "
+                  f"done={s['done']} failed={s['failed']} "
+                  f"dropped={s['dropped']} hard_lost={s['hard_lost']}")
+            print(f"  e2e latency (ticks): p50={s['e2e_p50']:.1f} "
+                  f"p99={s['e2e_p99']:.1f}  launches={s['launches']} "
+                  f"retries={s['retries']}")
+        if staged["e2e_p50"] and chained["e2e_p50"]:
+            print(f"  stage-chained speedup: "
+                  f"{staged['e2e_p50'] / chained['e2e_p50']:.2f}x e2e p50")
+        assert staged["hard_lost"] == 0, "hard DAGs silently lost"
+        assert chained["hard_lost"] == 0, "hard DAGs silently lost"
+        return
 
     if args.chaos:
         summary = run_chaos(args.fault_trace, seed=args.seed,

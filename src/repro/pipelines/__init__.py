@@ -52,6 +52,9 @@ from repro.pipelines.mmse import (expand_complex_channel,  # noqa: F401
                                   mmse_equalize_split_pallas,
                                   mmse_equalize_tiled,
                                   mmse_tiled_vmem_floats)
+from repro.pipelines.pusch import (channel_estimate_pallas,  # noqa: F401
+                                   pusch_chain_pallas, pusch_fft_pallas,
+                                   svd_apply_pallas, svd_factor_pallas)
 from repro.pipelines.qr_solve import (qr_solve,  # noqa: F401
                                       qr_solve_blocked, qr_solve_pallas,
                                       qr_solve_tiled, qr_solve_unfused,
@@ -66,5 +69,7 @@ __all__ = [
     "mmse_equalize_split", "mmse_equalize_split_pallas",
     "mmse_equalize_tiled", "mmse_equalize_blocked",
     "expand_complex_channel",
+    "channel_estimate_pallas", "pusch_chain_pallas", "pusch_fft_pallas",
+    "svd_apply_pallas", "svd_factor_pallas",
     "tiled_vmem_floats", "qr_tiled_vmem_floats", "mmse_tiled_vmem_floats",
 ]

@@ -43,12 +43,12 @@ from repro.serve.cost import (CostModel, DriftStat,  # noqa: F401
                               RobustEstimator)
 from repro.serve.faults import (Fault, FaultInjector,  # noqa: F401
                                 InjectedLaunchError)
-from repro.serve.metrics import (DropRecord, FailRecord,  # noqa: F401
-                                 FaultStats, LatencyStats,
+from repro.serve.metrics import (DagStats, DropRecord,  # noqa: F401
+                                 FailRecord, FaultStats, LatencyStats,
                                  LaunchRecord, MetricsSnapshot,
                                  PipelineStats, Recorder, ShardStats,
                                  shard_stats)
-from repro.serve.mux import OverloadPolicy, SolverMux  # noqa: F401
+from repro.serve.mux import DagJob, OverloadPolicy, SolverMux  # noqa: F401
 from repro.serve.shard import LaneShards  # noqa: F401
 from repro.serve.solver import (PipelineEngine, SolveJob,  # noqa: F401
                                 VariantDispatcher)
@@ -67,6 +67,7 @@ __all__ = [
     "EngineCore", "FifoEngineCore", "ManualClock", "pad_group",
     "DecodeEngine", "Request",
     "PipelineEngine", "SolveJob", "SolverMux", "VariantDispatcher",
+    "DagJob", "DagStats",
     "OverloadPolicy", "CostModel", "DriftStat", "RobustEstimator",
     "ServeConfig", "global_config", "BucketTuner",
     "DropRecord", "FailRecord", "FaultStats", "LatencyStats",

@@ -209,6 +209,25 @@ class FaultStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class DagStats:
+    """Aggregate view of one served DAG's end-to-end traffic
+    (``MetricsSnapshot.dags``): terminal counts per state plus the
+    submit-to-last-stage-done latency distribution — the per-*stage*
+    latencies live in the stage pipelines' own :class:`PipelineStats`."""
+
+    dag: str
+    submitted: int
+    done: int
+    failed: int = 0
+    dropped: int = 0
+    latency: LatencyStats = dataclasses.field(
+        default_factory=lambda: LatencyStats.of([]))
+    """End-to-end (DAG submit -> final stage done) latency over the
+    completed DAGs, in clock seconds."""
+    latency_by_priority: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineStats:
     """Aggregate SLO view of one pipeline's traffic."""
 
@@ -285,6 +304,9 @@ class MetricsSnapshot:
     shard_imbalance_alert: bool = False
     """True when ``shard_imbalance`` exceeds the configured
     ``imbalance_alert`` ratio — the skew observability hook."""
+    dags: dict = dataclasses.field(default_factory=dict)
+    """``dag name -> DagStats`` for DAG jobs served via
+    ``SolverMux.submit_dag`` (empty when no DAGs were submitted)."""
 
     def __getitem__(self, pipeline: str) -> PipelineStats:
         return self.pipelines[pipeline]
@@ -305,6 +327,8 @@ class Recorder:
         self._preempts: dict[str, int] = collections.defaultdict(int)
         self._fails: list[FailRecord] = []
         self._retries: dict[str, int] = collections.defaultdict(int)
+        self._dag_submits: dict[str, int] = collections.defaultdict(int)
+        self._dag_records: list[tuple[str, float, float, str, str]] = []
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, t: float, variant: str = "base",
@@ -337,6 +361,17 @@ class Recorder:
                     priority: str = "best_effort",
                     reason: str = "launch_failed") -> None:
         self._fails.append(FailRecord(pipeline, t, priority, reason))
+
+    def record_dag_submit(self, dag: str) -> None:
+        self._dag_submits[dag] += 1
+
+    def record_dag(self, dag: str, submitted_at: float,
+                   finished_at: float, state: str,
+                   priority: str = "best_effort") -> None:
+        """One DAG job reaching a terminal state (``done`` / ``failed``
+        / ``dropped``); latency folds only over ``done``."""
+        self._dag_records.append((dag, submitted_at, finished_at, state,
+                                  priority))
 
     def snapshot(self) -> MetricsSnapshot:
         per: dict[str, PipelineStats] = {}
@@ -383,8 +418,28 @@ class Recorder:
                 lanes_coalesced=sum(l.coalesced for l in launches),
                 latency_by_priority={p: LatencyStats.of(v)
                                      for p, v in sorted(by_prio.items())})
+        dags: dict[str, DagStats] = {}
+        dag_names = set(self._dag_submits) | {r[0]
+                                              for r in self._dag_records}
+        for dname in sorted(dag_names):
+            recs = [r for r in self._dag_records if r[0] == dname]
+            lat = [f - s for _, s, f, st, _ in recs if st == "done"]
+            by_prio: dict[str, list[float]] = collections.defaultdict(list)
+            for _, s, f, st, prio in recs:
+                if st == "done":
+                    by_prio[prio].append(f - s)
+            dags[dname] = DagStats(
+                dag=dname,
+                submitted=self._dag_submits.get(dname, len(recs)),
+                done=sum(1 for r in recs if r[3] == "done"),
+                failed=sum(1 for r in recs if r[3] == "failed"),
+                dropped=sum(1 for r in recs if r[3] == "dropped"),
+                latency=LatencyStats.of(lat),
+                latency_by_priority={p: LatencyStats.of(v)
+                                     for p, v in sorted(by_prio.items())})
         return MetricsSnapshot(
             pipelines=per,
+            dags=dags,
             launches=tuple(self._launches),
             total_jobs=sum(len(v) for v in self._jobs.values()),
             total_launches=len(self._launches),

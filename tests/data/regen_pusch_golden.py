@@ -1,0 +1,37 @@
+"""Regenerate ``pusch_trace.json`` + ``pusch_golden.json``.
+
+Run after any INTENTIONAL DAG-scheduling change (stage admission
+order, criticality ranking, DAG event schema), then review the golden
+diff like any other code change:
+
+  PYTHONPATH=src python tests/data/regen_pusch_golden.py
+
+The replay parameters here must stay in sync with
+``tests/test_dag_serve.py::test_golden_pusch_replay_event_sequence``.
+The golden event stream is the proof artifact for staged scheduling:
+it pins stage ordering (topological), criticality-first admission (the
+equal-deadline rank inversion at t=2.0), and the deterministic
+end-to-end DAG latency under the virtual clock.
+"""
+import json
+import pathlib
+
+from repro.launch.serve_solvers import pusch_trace, replay_pusch
+
+DATA = pathlib.Path(__file__).parent
+
+def main():
+    trace = pusch_trace(4, seed=0)
+    (DATA / "pusch_trace.json").write_text(
+        json.dumps(trace, indent=1) + "\n")
+    mux, dags = replay_pusch(trace)
+    events = mux.drain_events()
+    out = DATA / "pusch_golden.json"
+    out.write_text(json.dumps(events, indent=1) + "\n")
+    kinds = sorted({e["event"] for e in events})
+    states = sorted({d.state for d in dags})
+    print(f"wrote {out}: {len(events)} events, kinds={kinds}, "
+          f"dag states={states}")
+
+if __name__ == "__main__":
+    main()

@@ -47,7 +47,7 @@ except ModuleNotFoundError:
 
 __all__ = [
     "HAVE_HYPOTHESIS", "fuzzed", "integers", "floats", "sampled",
-    "traces", "cost_streams", "fault_streams",
+    "traces", "dag_traces", "cost_streams", "fault_streams",
     "TRACE_PIPELINES", "TRACE_SIZES",
     "spd_system", "tall_system", "channel_planes",
 ]
@@ -77,6 +77,18 @@ def traces(max_len: int = 16):
     ``(pipeline, n, priority, deadline_ticks, gap_ticks)`` entries (see
     module docstring)."""
     return ("traces", max_len)
+
+
+def dag_traces(max_len: int = 6):
+    """Random served-DAG traces for the staged-scheduling invariants
+    (tests/test_dag_serve.py): lists of
+    ``(dag, n, priority, deadline_ticks, gap_ticks, chained)`` entries
+    replayed through ``SolverMux.submit_dag`` on a virtual clock.
+    ``deadline_ticks == 0`` means no deadline; ``chained`` only takes
+    effect on DAGs that declare a fused stage chain.  Problem arrays are
+    built deterministically from the entry index, so a failing trace
+    shrinks to a reproducible scenario."""
+    return ("dag_traces", max_len)
 
 
 def cost_streams(max_len: int = 64, lo: float = 1e-9, hi: float = 10.0):
@@ -112,6 +124,15 @@ def _resolve(spec):
             _st.sampled_from(("hard", "best_effort")),
             _st.integers(min_value=0, max_value=4),   # 0 = no deadline
             _st.integers(min_value=0, max_value=2))   # arrival gap
+        return _st.lists(entry, min_size=1, max_size=spec[1])
+    if kind == "dag_traces":
+        entry = _st.tuples(
+            _st.sampled_from(("pusch_receive", "svd_solve")),
+            _st.sampled_from(TRACE_SIZES),
+            _st.sampled_from(("hard", "best_effort")),
+            _st.integers(min_value=0, max_value=8),   # 0 = no deadline
+            _st.integers(min_value=0, max_value=2),   # arrival gap
+            _st.booleans())                           # chained
         return _st.lists(entry, min_size=1, max_size=spec[1])
     if kind == "fault_streams":
         blackhole = _st.lists(_st.fixed_dictionaries({

@@ -73,6 +73,20 @@ def test_fuse_scan_is_scan():
     np.testing.assert_allclose(float(final), c, rtol=1e-6)
 
 
+def test_fuse_scan_zero_length_is_identity():
+    """Degenerate fusion: a zero-trip scan (the inner_base=0 stream
+    case) returns the initial carry untouched and an empty FIFO trace —
+    pinned so the fused kernels can rely on it for empty tail blocks."""
+    step = lambda c, x: (c + 1.0, c)
+    final, ys = fuse_scan(step, jnp.asarray(2.5), length=0)
+    assert float(final) == 2.5
+    assert np.asarray(ys).shape == (0,)
+    final2, ys2 = fuse_scan(step, jnp.asarray(2.5),
+                            xs=jnp.zeros((0,)))
+    assert float(final2) == 2.5
+    assert np.asarray(ys2).shape == (0,)
+
+
 # ---------------- criticality planning ----------------
 
 def test_plan_split_cholesky_shape():
@@ -91,6 +105,78 @@ def test_plan_split_always_one_critical():
                RegionCost("b", 1.0, has_transcendental=True)]
     crit, non = plan_split(regions)
     assert len(crit) == 1 and len(non) == 1
+
+
+@pytest.mark.parametrize("threshold", [0.1, 0.25, 0.5])
+def test_plan_split_threshold_is_inclusive(threshold):
+    """A region carrying EXACTLY `threshold` of the work is critical —
+    the boundary is >=, which the served-DAG criticality knob
+    (DagSpec.crit_threshold) relies on."""
+    other = 1.0 / threshold - 1.0
+    regions = [RegionCost("edge", 1.0), RegionCost("rest", other)]
+    crit, _ = plan_split(regions, threshold=threshold)
+    assert "edge" in crit
+
+
+@pytest.mark.parametrize("threshold", [0.1, 0.25, 0.5])
+def test_plan_split_just_below_threshold_is_slack(threshold):
+    regions = [RegionCost("edge", 1.0 - 1e-6),
+               RegionCost("rest", 1.0 / threshold - 1.0)]
+    crit, non = plan_split(regions, threshold=threshold)
+    assert "edge" in non and "rest" in crit
+
+
+def test_plan_split_transcendental_excluded_even_when_dominant():
+    """A sqrt/div-dominated region never joins the critical set on
+    share alone (paper: sub-critical regions are the sqrt/div chains)."""
+    regions = [RegionCost("sqrtchain", 90.0, has_transcendental=True),
+               RegionCost("bulk", 30.0)]
+    crit, non = plan_split(regions, threshold=0.25)
+    assert crit == ["bulk"] and non == ["sqrtchain"]
+
+
+def test_plan_split_biggest_wins_fallback():
+    """When every region is excluded (all transcendental or all below
+    threshold), the largest is critical by definition and everything
+    else is slack."""
+    regions = [RegionCost("a", 5.0, has_transcendental=True),
+               RegionCost("b", 9.0, has_transcendental=True),
+               RegionCost("c", 2.0, has_transcendental=True)]
+    crit, non = plan_split(regions)
+    assert crit == ["b"]
+    assert sorted(non) == ["a", "c"]
+
+
+def test_plan_split_zero_total_work():
+    """All-zero work estimates must not divide by zero; the fallback
+    still nominates exactly one critical region."""
+    regions = [RegionCost("a", 0.0), RegionCost("b", 0.0)]
+    crit, non = plan_split(regions)
+    assert len(crit) == 1 and len(non) == 1
+    assert set(crit) | set(non) == {"a", "b"}
+
+
+def test_region_graph_critical_selects_first_marked():
+    g = RegionGraph(
+        regions=[Region("a", None), Region("b", None, critical=True),
+                 Region("c", None, critical=True)],
+        deps=[OrderedDep("a", "b"), OrderedDep("b", "c")])
+    assert g.critical.name == "b"
+
+
+def test_dag_spec_criticality_uses_plan_split():
+    """The served-DAG layer's stage criticality is plan_split over the
+    stages' modeled FLOPs: the PUSCH channel estimate is critical, the
+    transcendental FFT and the small equalize tail are slack."""
+    from repro import kernels as K
+    spec = K.get_dag("pusch_receive")
+    shapes = tuple(np.shape(a)
+                   for a in spec.make_case(np.random.default_rng(0), 8))
+    crit, slack = spec.criticality(shapes)
+    assert crit == ["chanest"]
+    assert sorted(slack) == ["equalize", "fft"]
+    crit_c, slack_c = spec.criticality(shapes, chained=True)
+    assert crit_c == ["chain"] and slack_c == ["fft"]
 
 
 def test_mxu_padding_and_efficiency():

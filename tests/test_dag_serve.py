@@ -1,0 +1,284 @@
+"""Served pipeline DAG invariants: golden staged-scheduling trace +
+property suite.
+
+Three layers of proof for the DAG subsystem (``SolverMux.submit_dag``):
+
+* **golden replay** — the committed ``tests/data/pusch_trace.json``
+  replayed on a virtual clock must reproduce
+  ``tests/data/pusch_golden.json`` byte for byte.  The event stream
+  pins stage ordering, criticality-first admission (the equal-deadline
+  rank inversion at t=2.0), and the deterministic end-to-end latency.
+  Regenerate with ``tests/data/regen_pusch_golden.py`` after any
+  INTENTIONAL scheduling change and review the diff.
+
+* **fuzzed properties** (hypothesis; deterministic grid fallback) —
+  for random DAG traces: every submitted DAG reaches a terminal state
+  with every stage accounted (terminal job or explicit cancellation —
+  no orphans, also under injected faults and preemption pressure);
+  stage outputs are bit-identical to standalone runs of the same
+  pipeline; the flush order never violates the DAG's topological
+  order.
+
+* **mid-DAG fault containment** — a stage that fails mid-DAG retries
+  through launch supervision and the DAG completes (or cascades
+  cleanly); hard DAGs are never silently lost.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.launch.serve_solvers import (dag_hard_lost, pusch_trace,
+                                        replay_pusch, run_pusch)
+from repro.serve import FaultInjector
+
+from strategies import dag_traces, fault_streams, fuzzed, integers
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+# canned entries for the deterministic grid (same tuple layout as the
+# dag_traces() strategy): (dag, n, priority, deadline_ticks, gap, chained)
+GRID_TRACES = [
+    [("pusch_receive", 8, "hard", 8, 1, False),
+     ("pusch_receive", 8, "hard", 7, 1, False),
+     ("svd_solve", 8, "best_effort", 0, 0, False)],
+    [("pusch_receive", 8, "hard", 4, 0, True),
+     ("pusch_receive", 12, "best_effort", 0, 1, True),
+     ("svd_solve", 12, "hard", 6, 0, False)],
+    [("svd_solve", 8, "hard", 1, 0, False),
+     ("pusch_receive", 8, "best_effort", 0, 0, False)],
+]
+
+
+def _trace_dicts(entries) -> list[dict]:
+    """dag_traces() tuples -> the committed-trace dict schema that
+    ``replay_pusch`` consumes.  ``chained`` only sticks on DAGs that
+    declare a fused chain; ``deadline_ticks == 0`` means no deadline."""
+    trace, tick = [], 0
+    for i, (dag, n, priority, deadline, gap, chained) in enumerate(entries):
+        spec = K.get_dag(dag)
+        trace.append(dict(tick=tick, dag=dag, n=n, priority=priority,
+                          deadline_ticks=deadline or None,
+                          chained=chained and bool(spec.chained),
+                          seed=1000 + i))
+        tick += gap
+    return trace
+
+
+def _replay(entries, injector=None):
+    return replay_pusch(_trace_dicts(entries), injector=injector)
+
+
+# ---------------- invariant checkers ----------------
+
+TERMINAL = ("done", "failed", "dropped")
+
+
+def _check_accounting(mux, dags) -> None:
+    """Every DAG terminal; every stage of its (chained-aware) stage list
+    accounted — a terminal stage job or an explicit cancellation."""
+    assert mux.pending() == 0, "mux left stage jobs queued after drain"
+    for dj in dags:
+        assert dj.state in TERMINAL, (dj.dag, dj.state)
+        stages = dj.spec.stage_list(chained=dj.chained)
+        for stage in stages:
+            sj = dj.stages.get(stage.name)
+            if dj.state == "done":
+                assert sj is not None and sj != "cancelled", \
+                    f"{dj.dag}:{stage.name} missing from a done DAG"
+                assert sj.state == "done", (stage.name, sj.state)
+            else:
+                # failed/dropped DAG: stage either ran to a terminal
+                # state or was explicitly cancelled — never orphaned
+                assert sj == "cancelled" or sj is None or \
+                    sj.state in TERMINAL, (stage.name, sj.state)
+                assert sj is not None, \
+                    f"{dj.dag}:{stage.name} neither run nor cancelled"
+        if dj.state == "done":
+            assert dj.out is not None
+
+
+def _check_bit_identity(dags) -> None:
+    """Every done stage job's served output equals a standalone run of
+    the dispatched variant on the same (singleton-batch) arguments —
+    batching + benign padding lanes must not perturb a single bit."""
+    checked = 0
+    for dj in dags:
+        for name, sj in dj.stages.items():
+            if sj == "cancelled" or sj.state != "done":
+                continue
+            spec = K.get(sj.pipeline)
+            variant = spec.dispatch_key(
+                tuple(np.shape(a) for a in sj.args),
+                tuple(np.asarray(a).dtype for a in sj.args))
+            alone = np.asarray(
+                variant.fn(*[np.asarray(a)[None] for a in sj.args]))[0]
+            assert np.array_equal(np.asarray(sj.out), alone), \
+                f"{dj.dag}:{name} served output != standalone run"
+            checked += 1
+    assert checked > 0
+
+
+def _check_topological(mux_events, dags) -> None:
+    """The flush order of stage jobs never violates a DAG's
+    producer->consumer edges (derived from each stage's ``consumes``,
+    chained-aware)."""
+    stage_of = {}   # job seq -> (dag seq, stage name)
+    for e in mux_events:
+        if e["event"] == "dag_stage":
+            stage_of[e["job"]] = (e["seq"], e["stage"])
+    first_flush = {}  # job seq -> event index of its (first) flush
+    for i, e in enumerate(mux_events):
+        if e["event"] != "flush":
+            continue
+        for seq in list(e.get("jobs", ())) + list(e.get("coalesced", ())):
+            first_flush.setdefault(seq, i)
+    for dj in dags:
+        flushed = {}  # stage name -> flush index
+        for seq, (dseq, sname) in stage_of.items():
+            if dseq == dj.seq and seq in first_flush:
+                flushed[sname] = first_flush[seq]
+        for stage in dj.spec.stage_list(chained=dj.chained):
+            for producer in stage.consumes:
+                if stage.name in flushed and producer in flushed:
+                    assert flushed[producer] < flushed[stage.name], \
+                        (dj.dag, producer, stage.name)
+
+
+# ---------------- golden replay ----------------
+
+def test_golden_pusch_replay_event_sequence():
+    """Byte-for-byte: the committed DAG trace replayed on the virtual
+    clock reproduces the committed golden event stream."""
+    trace = json.loads((DATA / "pusch_trace.json").read_text())
+    mux, dags = replay_pusch(trace)
+    got = json.dumps(mux.drain_events(), indent=1) + "\n"
+    assert got == (DATA / "pusch_golden.json").read_text(), \
+        "DAG scheduling decisions drifted from the golden trace; if " \
+        "intentional, regenerate via tests/data/regen_pusch_golden.py"
+    assert all(d.state == "done" for d in dags)
+
+
+def test_golden_trace_matches_generator():
+    """The committed trace file IS pusch_trace(4, seed=0) — the regen
+    script and the golden test stay in lockstep."""
+    committed = json.loads((DATA / "pusch_trace.json").read_text())
+    assert committed == pusch_trace(4, seed=0)
+
+
+def test_criticality_rank_admits_critical_stage_first():
+    """The staggered-deadline window in the golden trace: at t=2.0 the
+    earlier DAG's slack equalize stage (lower job seq) and the later
+    DAG's critical channel-estimate stage (higher job seq) hold EQUAL
+    absolute deadlines, so plain seq order would flush equalize first —
+    the criticality rank must invert that and admit chanest ahead."""
+    events = json.loads((DATA / "pusch_golden.json").read_text())
+    stage_of = {e["job"]: (e["stage"], e["critical"])
+                for e in events if e["event"] == "dag_stage"}
+    flushed = []
+    for e in events:
+        if e["event"] == "flush" and e["t"] == 2.0:
+            for seq in e["jobs"]:
+                if seq in stage_of:
+                    flushed.append((seq, *stage_of[seq]))
+    names = [name for _, name, _ in flushed]
+    assert "chanest" in names and "equalize" in names, flushed
+    i_crit = names.index("chanest")
+    i_slack = names.index("equalize")
+    assert i_crit < i_slack, \
+        f"critical stage not admitted first at t=2.0: {flushed}"
+    # ... and it won on rank, not on arrival order: the critical job
+    # was submitted AFTER the slack one (higher seq)
+    assert flushed[i_crit][0] > flushed[i_slack][0], flushed
+    assert flushed[i_crit][2] is True and flushed[i_slack][2] is False
+
+
+def test_chained_e2e_latency_beats_staged():
+    """Fusing the channel-estimate->equalize tail lane-resident removes
+    one full scheduling round trip: chained e2e p50 must be strictly
+    below stage-independent at the same budget/trace."""
+    staged = run_pusch(False, ticks=4)
+    chained = run_pusch(True, ticks=4)
+    assert staged["done"] == staged["dags"]
+    assert chained["done"] == chained["dags"]
+    assert chained["e2e_p50"] < staged["e2e_p50"], \
+        (chained["e2e_p50"], staged["e2e_p50"])
+    assert chained["launches"] < staged["launches"]
+
+
+# ---------------- mid-DAG fault containment ----------------
+
+def test_mid_dag_stage_fault_contained():
+    """A targeted mid-DAG stage fault (channel estimate raises twice)
+    is absorbed by launch supervision: the stage retries, the DAG
+    completes, zero hard DAGs lost."""
+    s = run_pusch(False, ticks=4,
+                  fault_trace=str(DATA / "pusch_fault_trace.json"))
+    assert s["retries"] >= 1, "fault trace did not fire"
+    assert s["hard_lost"] == 0
+    assert s["done"] == s["dags"]
+    assert s["failed_jobs"] == 0
+
+
+def test_mid_dag_fault_beyond_retries_cascades_cleanly():
+    """When retries exhaust, the failed stage ends the DAG and cancels
+    the unreachable downstream stages — terminal, never orphaned."""
+    injector = FaultInjector({"target": [
+        {"pipeline": "pusch_chanest", "variant": "base",
+         "kind": "raise", "count": 50}]}, seed=0)
+    mux, dags = _replay(GRID_TRACES[0], injector=injector)
+    _check_accounting(mux, dags)
+    pusch = [d for d in dags if d.dag == "pusch_receive"]
+    assert all(d.state == "failed" for d in pusch)
+    for d in pusch:
+        assert d.reason.startswith("stage:chanest:")
+        assert d.stages["equalize"] == "cancelled"
+    # the svd DAG shares the mux and is untouched by the cascade
+    assert all(d.state == "done" for d in dags if d.dag == "svd_solve")
+
+
+# ---------------- deterministic grid + fuzzed properties ----------------
+
+@pytest.mark.parametrize("idx", range(len(GRID_TRACES)))
+def test_dag_invariants_grid(idx):
+    mux, dags = _replay(GRID_TRACES[idx])
+    events = mux.drain_events()
+    _check_accounting(mux, dags)
+    _check_bit_identity(dags)
+    _check_topological(events, dags)
+
+
+@fuzzed(max_examples=15, trace=dag_traces())
+def test_dag_terminal_accounting_fuzzed(trace):
+    mux, dags = _replay(trace)
+    _check_accounting(mux, dags)
+
+
+@fuzzed(max_examples=10, trace=dag_traces())
+def test_dag_stage_outputs_match_standalone_fuzzed(trace):
+    _, dags = _replay(trace)
+    _check_bit_identity(dags)
+
+
+@fuzzed(max_examples=15, trace=dag_traces())
+def test_dag_topological_order_fuzzed(trace):
+    mux, dags = _replay(trace)
+    _check_topological(mux.drain_events(), dags)
+
+
+@fuzzed(max_examples=10, trace=dag_traces(), faults=fault_streams(),
+        fault_seed=integers(0, 2 ** 8))
+def test_dag_faults_never_orphan_fuzzed(trace, faults, fault_seed):
+    """Under seeded fault injection every DAG still reaches a terminal
+    state with all stages accounted, and hard DAGs are never silently
+    lost (cascade or complete — no limbo)."""
+    injector = FaultInjector(faults, seed=fault_seed)
+    mux, dags = _replay(trace, injector=injector)
+    events = mux.drain_events()
+    _check_accounting(mux, dags)
+    _check_topological(events, dags)
+    assert dag_hard_lost(dags) == 0

@@ -153,7 +153,10 @@ def test_mmse_complex_expansion_recovers_symbols():
 
 def test_registry_has_kernels_and_pipelines():
     assert set(K.names(kind="pipeline")) == {"cholesky_solve", "qr_solve",
-                                             "mmse_equalize"}
+                                             "mmse_equalize", "pusch_fft",
+                                             "pusch_chanest", "pusch_chain",
+                                             "svd_factor", "svd_apply"}
+    assert set(K.dag_names()) == {"pusch_receive", "svd_solve"}
     # every seed kernel is registered — the registry IS the import list
     assert {"cholesky", "trisolve", "qr", "svd", "gemm", "fir", "fft",
             "flash_attention", "ssm_scan"} <= set(K.names(kind="kernel"))

@@ -140,6 +140,11 @@ def _check_decomposition_preserves_coverage(n, stretch, base, cap):
     pattern's iteration space (command_count * avg length == length)."""
     s = inductive(outer_trip=n, inner_base=base, inner_stretch=stretch)
     c = command_count(s, cap)
+    if s.length() == 0:
+        # degenerate pattern (zero iterations anywhere, e.g. inner_base=0
+        # with non-positive stretch): no commands at any capability
+        assert c == 0
+        return
     assert c >= 1
     # RI expresses any 2D inductive pattern in one command
     if cap == "RI":
@@ -171,10 +176,45 @@ def test_inductive_length_matches_sum(n, stretch, base):
 
 @pytest.mark.parametrize("n", [1, 3, 10])
 @pytest.mark.parametrize("stretch", [-2, -1, 0, 1, 2])
-@pytest.mark.parametrize("base", [1, 4, 10])
+@pytest.mark.parametrize("base", [0, 1, 4, 10])
 @pytest.mark.parametrize("cap", ["R", "RR", "RI"])
 def test_decomposition_preserves_coverage(n, stretch, base, cap):
     _check_decomposition_preserves_coverage(n, stretch, base, cap)
+
+
+# ---------------- degenerate (zero-length) streams ----------------
+# An inductive stream whose inner trips start at zero (inner_base=0) is
+# legal — StreamDim.trip clamps at zero — but the control-overhead model
+# used to charge >=1 command for patterns with NO iterations.  These pins
+# hold the guarded behavior.
+
+@pytest.mark.parametrize("cap", ["V", "R", "RR", "RI"])
+def test_zero_length_stream_needs_no_commands(cap):
+    empty = inductive(outer_trip=4, inner_base=0, inner_stretch=0)
+    assert empty.length() == 0
+    assert empty.trip_counts() == [0, 0, 0, 0]
+    assert command_count(empty, cap) == 0
+    assert commands_per_iteration(empty, cap) == 0.0
+    assert average_stream_length(empty, cap) == 0.0
+
+
+@pytest.mark.parametrize("cap", ["V", "R", "RR", "RI"])
+def test_zero_trip_rect_needs_no_commands(cap):
+    assert command_count(rect(0, 8), cap) == 0
+    assert command_count(rect(8, 0), cap) == 0
+
+
+def test_inner_base_zero_growing_stream_counts_all_rows():
+    """inner_base=0 with positive stretch: row j=0 is empty but the
+    pattern is NOT degenerate — RI takes one command, and decomposed R
+    commands issue one per outer row (the empty row's command is issued
+    before its zero trip count is known: the paper's 3+5n accounting)."""
+    s = inductive(outer_trip=4, inner_base=0, inner_stretch=2)
+    assert s.trip_counts() == [0, 2, 4, 6]
+    assert s.length() == 12
+    assert command_count(s, "RI") == 1
+    assert command_count(s, "R") == 4  # one per outer row, empty included
+    assert average_stream_length(s, "R") == pytest.approx(3.0)
 
 
 @pytest.mark.parametrize("n", [2, 3, 5, 8, 12])
@@ -194,7 +234,7 @@ def test_inductive_length_matches_sum_fuzzed(n, stretch, base):
 
 
 @fuzzed(max_examples=80, n=integers(1, 10), stretch=integers(-2, 2),
-        base=integers(1, 10), cap=sampled("R", "RR", "RI"))
+        base=integers(0, 10), cap=sampled("R", "RR", "RI"))
 def test_decomposition_preserves_coverage_fuzzed(n, stretch, base, cap):
     _check_decomposition_preserves_coverage(n, stretch, base, cap)
 

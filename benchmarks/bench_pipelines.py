@@ -47,7 +47,15 @@ blackholed shard) replayed at mesh=4 via
 reference, persisting hard-SLO attainment under faults, the zero
 silent-loss count, and the quarantine/reinstatement/demotion
 observables (``serve_slo/faults/*``, gated by ``check_bench_json``:
-hard_lost must be 0 and the attainment ratio at least 0.8).
+hard_lost must be 0 and the attainment ratio at least 0.8), and the
+DECODE sweep: continuous-batching LM decode measured two ways — a
+warmed real-clock microbenchmark for per-phase (insert / prefill /
+generate) latency plus the per-step calibration rows
+``CostModel.from_bench_json`` fits decode rates from, and the committed
+mixed solver+decode trace replayed continuous vs lockstep at equal
+budget on the virtual clock (``serve_slo/decode/*``, gated by
+``check_bench_json``: continuous tokens/step must strictly beat the
+lockstep baseline and hard_lost must be 0).
 """
 from __future__ import annotations
 
@@ -59,8 +67,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (emit, emit_sharded, emit_variant, header,
-                               timeit)
+from benchmarks.common import (emit, emit_decode, emit_sharded,
+                               emit_variant, header, timeit)
 from repro import kernels as K
 from repro import pipelines as pp
 from repro.kernels import ref
@@ -454,3 +462,76 @@ def run_slo() -> None:
          f"retries={faulted_dag['retries']},"
          f"done={faulted_dag['done']},dags={faulted_dag['dags']},"
          f"failed_jobs={faulted_dag['failed_jobs']}", unit="count")
+
+    # ---- continuous-batching decode sweep: (a) per-phase latency +
+    # per-step calibration on the real clock (microbenchmark shape:
+    # warmed engine, pure-prefill and pure-generate step populations),
+    # (b) the committed mixed solver+decode trace replayed continuous
+    # vs lockstep at equal budget on the virtual clock — tokens/step is
+    # the gated throughput win (rows required by check_bench_json) ----
+    from repro.launch.serve_solvers import decode_model, run_decode_serve
+    from repro.serve.decode import DecodeEngine, Request
+
+    header("serve SLO decode: per-phase latency + continuous vs "
+           "lockstep throughput")
+    cfg, params = decode_model()
+    eng = DecodeEngine(cfg, params, batch=4, max_len=64, eos_id=-1)
+    eng.submit(Request(prompt=[3, 5], max_new=3))
+    eng.run()                          # warmup: absorb the jit compile
+    eng.reset_metrics()
+
+    def _step_wall_us(reqs):
+        """Median per-step wall of a drained population (us)."""
+        for r in reqs:
+            eng.submit(r)
+        walls = []
+        while eng.has_work():
+            t0 = time.perf_counter()
+            eng.step()
+            walls.append(time.perf_counter() - t0)
+        walls.sort()
+        return walls[len(walls) // 2] * 1e6
+
+    # full pool, every timed step a prompt feed / a generate feed
+    prefill_us = _step_wall_us(
+        [Request(prompt=[2 + i] * 8, max_new=1) for i in range(4)])
+    generate_us = _step_wall_us(
+        [Request(prompt=[10 + i], max_new=8) for i in range(4)])
+    step_flops = eng.lanes * eng.token_flops
+    emit_decode(phase="prefill", wall_us=prefill_us, flops=step_flops)
+    emit_decode(phase="generate", wall_us=generate_us, flops=step_flops)
+
+    # mixed fan: per-request phase latencies through the shared recorder
+    eng.reset_metrics()
+    for i in range(8):
+        eng.submit(Request(prompt=[2 + i] * (1 + i % 4),
+                           max_new=2 + (3 * i) % 5))
+    eng.run()
+    d = eng.metrics().decode
+    emit_decode(phase="insert", wall_us=d.insert.p50 * 1e6, flops=0.0)
+    emit("serve_slo/decode/insert_latency", d.insert.p50 * 1e6,
+         f"p99={d.insert.p99 * 1e6:.0f}us,n={d.insert.count}")
+    emit("serve_slo/decode/prefill_latency", d.prefill.p50 * 1e6,
+         f"p99={d.prefill.p99 * 1e6:.0f}us,n={d.prefill.count}")
+    emit("serve_slo/decode/generate_latency", d.generate.p50 * 1e6,
+         f"p99={d.generate.p99 * 1e6:.0f}us,n={d.generate.count}")
+
+    cont = run_decode_serve(True, ticks=4)
+    base = run_decode_serve(False, ticks=4)
+    emit("serve_slo/decode/tokens_per_step_continuous",
+         cont["tokens_per_step"],
+         f"tokens={cont['tokens']},steps={cont['steps']},"
+         f"reuses={cont['slot_reuses']},done={cont['done']}",
+         unit="rate")
+    emit("serve_slo/decode/tokens_per_step_lockstep",
+         base["tokens_per_step"],
+         f"tokens={base['tokens']},steps={base['steps']},"
+         f"done={base['done']}", unit="rate")
+    emit("serve_slo/decode/continuous_speedup",
+         cont["tokens_per_step"] / base["tokens_per_step"],
+         f"continuous={cont['tokens_per_step']:.3f},"
+         f"lockstep={base['tokens_per_step']:.3f}", unit="ratio")
+    emit("serve_slo/decode/hard_lost",
+         float(cont["hard_lost"] + base["hard_lost"]),
+         f"requests={cont['requests']},solver_jobs={cont['solver_jobs']}",
+         unit="count")

@@ -39,6 +39,13 @@ least 0.8 against the fault-free reference (the replay is seeded and
 virtual-clocked, so the gate is exact).  The fault-free serving rows
 are produced with no injector attached and stay bit-identical.
 
+And the continuous-batching decode sweep: ``serve_slo/decode/*`` rows
+must carry per-phase (insert / prefill / generate) latency, continuous
+tokens/step strictly above the lockstep pool baseline on the committed
+mixed solver+decode trace at equal budget (virtual clock, exact), zero
+hard jobs or hard decode requests lost, and the payload's ``decode``
+calibration section must include measurable prefill/generate rows.
+
   PYTHONPATH=src python -m benchmarks.check_bench_json BENCH_pipelines.json
 """
 from __future__ import annotations
@@ -248,6 +255,62 @@ def check(path: str) -> None:
     assert int(fields["retries"]) >= 1, (
         f"mid-DAG fault trace never fired: {dag_lost['derived']}")
 
+    # Continuous-batching decode rows: per-phase latency must be
+    # present (real-clock microbenchmark; prefill/generate strictly
+    # positive), the committed mixed solver+decode trace must show
+    # continuous tokens/step strictly above the lockstep baseline at
+    # equal budget (virtual clock, exact), and no hard job or hard
+    # decode request may have been lost in either mode.
+    for phase in ("insert", "prefill", "generate"):
+        r = rows.get(f"serve_slo/decode/{phase}_latency")
+        assert r, (
+            f"serve_slo decode {phase} latency row missing — regenerate "
+            "with `--only variants,serve_slo --json-out ...`")
+        assert r["unit"] == "us", (
+            f"decode {phase} latency row must carry unit='us', got "
+            f"{r['unit']!r}")
+        floor = 0.0 if phase == "insert" else None
+        if floor is None:
+            assert r["us_per_call"] > 0, (
+                f"decode {phase} latency is not positive: "
+                f"{r['us_per_call']}")
+        else:
+            assert r["us_per_call"] >= floor, (
+                f"decode {phase} latency is negative: {r['us_per_call']}")
+    dec_cont = rows.get("serve_slo/decode/tokens_per_step_continuous")
+    dec_base = rows.get("serve_slo/decode/tokens_per_step_lockstep")
+    dec_speedup = rows.get("serve_slo/decode/continuous_speedup")
+    dec_lost = rows.get("serve_slo/decode/hard_lost")
+    assert dec_cont and dec_base and dec_speedup and dec_lost, (
+        "serve_slo decode throughput rows missing — regenerate with "
+        "`--only variants,serve_slo --json-out ...`")
+    for r in (dec_cont, dec_base):
+        assert r["unit"] == "rate" and r["us_per_call"] > 0, (
+            f"decode throughput row {r['name']!r} must be a positive "
+            f"rate: {r['us_per_call']} ({r['unit']})")
+    assert dec_cont["us_per_call"] > dec_base["us_per_call"], (
+        f"continuous-batching decode ({dec_cont['us_per_call']} "
+        f"tokens/step) must strictly beat the lockstep baseline "
+        f"({dec_base['us_per_call']} tokens/step)")
+    assert dec_speedup["unit"] == "ratio" and \
+        dec_speedup["us_per_call"] > 1.0, (
+            f"decode continuous speedup must exceed 1.0: "
+            f"{dec_speedup['us_per_call']}")
+    assert dec_lost["unit"] == "count" and \
+        dec_lost["us_per_call"] == 0.0, (
+            f"decode replay silently lost hard work: "
+            f"{dec_lost['us_per_call']} ({dec_lost['derived']})")
+    decode_cal = payload.get("decode", [])
+    cal_phases = {rec.get("phase") for rec in decode_cal}
+    assert {"prefill", "insert", "generate"} <= cal_phases, (
+        f"payload 'decode' calibration section incomplete: "
+        f"phases {sorted(cal_phases)}")
+    for rec in decode_cal:
+        assert rec["wall_us"] >= 0, f"negative decode wall-clock: {rec}"
+        if rec["phase"] in ("prefill", "generate"):
+            assert rec["wall_us"] > 0 and rec["flops"] > 0, (
+                f"decode calibration row not measurable: {rec}")
+
     sharded = payload.get("sharded", [])
     spanning = [rec for rec in sharded if rec.get("mesh", 1) > 1]
     assert spanning, ("payload 'sharded' section has no mesh > 1 "
@@ -264,7 +327,9 @@ def check(path: str) -> None:
           f"{thr[4] / thr[1]:.1f}x mesh1 ({len(spanning)} spanning "
           f"calibration rows), chaos hard_lost=0 at attainment ratio "
           f"{ratio['us_per_call']:.3f}, DAG chained "
-          f"{dag_speedup['us_per_call']:.2f}x staged with hard_lost=0")
+          f"{dag_speedup['us_per_call']:.2f}x staged with hard_lost=0, "
+          f"decode continuous {dec_speedup['us_per_call']:.2f}x lockstep "
+          f"with hard_lost=0")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ UNITS = ("us", "percent", "ratio", "count", "rate")
 ROWS: list[tuple[str, float, str, str]] = []
 VARIANTS: list[dict] = []
 SHARDED: list[dict] = []
+DECODE: list[dict] = []
 
 
 def timeit(fn, *args, reps: int = 20, warmup: int = 3) -> float:
@@ -63,3 +64,12 @@ def emit_sharded(**fields) -> None:
     baseline — the rows ``CostModel.from_bench_json`` re-fits per-mesh
     launch overheads from."""
     SHARDED.append(fields)
+
+
+def emit_decode(**fields) -> None:
+    """Record one decode-phase calibration row (phase, wall_us, flops)
+    for the ``--json-out`` baseline — the rows
+    ``CostModel.from_bench_json`` fits per-phase decode rates from
+    (``("decode", phase)`` table keys pricing continuous-batching
+    steps through the mux)."""
+    DECODE.append(fields)

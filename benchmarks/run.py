@@ -68,6 +68,7 @@ def json_payload(ran: list[str]) -> dict:
         "variants": common.VARIANTS,
         "dispatch_counts": counts,
         "sharded": common.SHARDED,
+        "decode": common.DECODE,
     }
 
 

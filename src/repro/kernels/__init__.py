@@ -350,8 +350,50 @@ class DagSpec:
         return RegionGraph(regions=regions, deps=list(deps))
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """A servable token-decode workload: the registry's description of
+    continuous-batching LM decode (:class:`repro.serve.decode.
+    DecodeEngine`), the third traffic class next to solver pipelines
+    (:class:`KernelSpec`) and stage DAGs (:class:`DagSpec`).
+
+    Decode is not a ``pallas_call`` over a lane group — its unit of
+    dispatch is one SPMD decode *step* over the slot pool — so it gets
+    its own registry rather than a ``kind`` on KernelSpec (benchmarks
+    and padding machinery iterate ``specs()`` expecting ``make_case`` /
+    ``run_pallas``, which decode deliberately does not have).  What the
+    mux needs to price and admit decode traffic lives here instead:
+    the phase names (maxtext's prefill / insert / generate microbench
+    shape) and a closed-form per-token FLOP model over the serving
+    :class:`~repro.models.config.ArchConfig` — the decode analogue of
+    ``Variant.model_flops``."""
+
+    name: str
+    phases: tuple[str, ...] = ("prefill", "insert", "generate")
+    description: str = ""
+    flops_fn: Callable | None = None
+    """Optional override: ``flops_fn(cfg) -> float`` per-token FLOPs."""
+
+    def token_flops(self, cfg) -> float:
+        """Model FLOPs to decode ONE token on one slot: ~2 FLOPs per
+        weight touched (QKVO projections, the FFN at the config's
+        arity, the LM head) — attention over the live cache is
+        position-dependent and deliberately excluded, matching the
+        closed-form (shape-only) convention of the solver FLOP
+        models."""
+        if self.flops_fn is not None:
+            return float(self.flops_fn(cfg))
+        d = cfg.d_model
+        attn = 2 * d * (cfg.n_heads + cfg.n_kv) * cfg.d_head \
+            + 2 * d * cfg.n_heads * cfg.d_head
+        ffn_mats = 3 if cfg.act == "swiglu" else 2
+        ffn = ffn_mats * 2 * d * cfg.d_ff
+        return float(cfg.n_layers * (attn + ffn) + 2 * d * cfg.vocab)
+
+
 _REGISTRY: dict[str, KernelSpec] = {}
 _DAGS: dict[str, DagSpec] = {}
+_DECODES: dict[str, DecodeSpec] = {}
 _BUILT = False
 _LOCK = threading.Lock()
 
@@ -376,6 +418,11 @@ def register_dag(spec: DagSpec) -> DagSpec:
     return spec
 
 
+def register_decode(spec: DecodeSpec) -> DecodeSpec:
+    if spec.name in _DECODES:
+        raise ValueError(f"duplicate decode registration: {spec.name!r}")
+    _DECODES[spec.name] = spec
+    return spec
 
 
 def _build() -> None:
@@ -391,6 +438,7 @@ def _build() -> None:
         except BaseException:
             _REGISTRY.clear()
             _DAGS.clear()
+            _DECODES.clear()
             raise
         _BUILT = True
 
@@ -1038,6 +1086,13 @@ def _register_all() -> None:
         deps=(OrderedDep("factor", "apply"),),
         make_case=_svd_dag_case, oracle=_svd_dag_oracle, rtol=2e-3))
 
+    # ---------------- token decode (continuous batching) ----------------
+    register_decode(DecodeSpec(
+        name="lm_decode",
+        description="continuous-batching LM token decode: per-slot "
+                    "positions, slot-level paged KV reuse, one SPMD "
+                    "step program over the slot pool"))
+
 
 def get(name: str) -> KernelSpec:
     _build()
@@ -1077,3 +1132,17 @@ def dag_names() -> list[str]:
 def dag_specs() -> list[DagSpec]:
     _build()
     return [_DAGS[n] for n in sorted(_DAGS)]
+
+
+def get_decode(name: str) -> DecodeSpec:
+    _build()
+    try:
+        return _DECODES[name]
+    except KeyError:
+        raise KeyError(f"unknown decode spec {name!r}; registered: "
+                       f"{sorted(_DECODES)}") from None
+
+
+def decode_names() -> list[str]:
+    _build()
+    return sorted(_DECODES)

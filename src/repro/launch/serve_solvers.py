@@ -584,6 +584,185 @@ def run_pusch(chained: bool, *, ticks: int = 4, lanes: int = 4,
     }
 
 
+# ---------------- mixed solver + decode traffic ----------------
+
+_DECODE_MODEL = None
+
+
+def decode_model():
+    """The smoke-scale LM ``(cfg, params)`` shared by every decode
+    scenario in this launcher — deterministic (fixed init key) and
+    built once per process (transformer init is the expensive part)."""
+    global _DECODE_MODEL
+    if _DECODE_MODEL is None:
+        import jax
+
+        from repro.configs import get_smoke
+        from repro.models import transformer as T
+        cfg = get_smoke("phi4-mini-3.8b")
+        _DECODE_MODEL = (cfg, T.init_params(jax.random.key(0), cfg))
+    return _DECODE_MODEL
+
+
+def decode_prompt(length: int, seed: int) -> list[int]:
+    """Deterministic seed-keyed prompt tokens — the form committed
+    decode traces store prompts in (never raw token arrays)."""
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(2, 500, size=length)]
+
+
+def decode_trace(ticks: int, seed: int = 0) -> list[dict]:
+    """The canonical mixed solver+decode workload: per tick, one hard
+    and one best-effort MMSE bulk chunk (solver lane traffic) plus two
+    decode requests — one hard greedy, one best-effort (periodically
+    sampled) — with prompt/output lengths that VARY per tick.  The
+    heterogeneity is the point: lockstep pool decode runs every pool
+    member to the longest prompt and longest ``max_new`` of its
+    generation and rebuilds the cache between pools, so on this trace
+    continuous per-slot batching strictly beats it in tokens per SPMD
+    step at the same budget — the acceptance gate the committed
+    ``serve_slo/decode/*`` rows pin."""
+    trace, seq = [], 0
+    for t in range(ticks):
+        for i in range(2):
+            trace.append(dict(
+                tick=t, kind="solve", pipeline="mmse_equalize", n=8, k=2,
+                priority="hard" if i == 0 else "best_effort",
+                deadline_ticks=3.0, seed=seed * 100003 + seq))
+            seq += 1
+        trace.append(dict(
+            tick=t, kind="decode", prompt_len=1 + t % 4,
+            max_new=2 + (3 * t) % 7, temperature=0.0, priority="hard",
+            deadline_ticks=8.0, seed=seed * 100003 + seq))
+        seq += 1
+        trace.append(dict(
+            tick=t, kind="decode", prompt_len=1 + (t * 2) % 5,
+            max_new=1 + (t * 5) % 9,
+            temperature=1.0 if t % 3 == 0 else 0.0,
+            priority="best_effort", deadline_ticks=12.0,
+            seed=seed * 100003 + seq))
+        seq += 1
+    return trace
+
+
+def replay_decode(trace: list[dict], *, lanes: int = 4,
+                  slots: int | None = None, max_len: int = 64,
+                  tick: float = 1.0, drain_ticks: int = 4,
+                  lockstep: bool = False):
+    """Replay a committed mixed solver+decode trace on a virtual clock:
+    submit each tick's solver jobs and decode requests, ``poll`` once
+    per tick (the attached policy round serves solver flushes AND up to
+    ``decode_steps_per_poll`` continuous-batching decode steps), keep
+    polling ``drain_ticks`` empty ticks, then ``run()``.  Returns
+    ``(mux, engine, requests, jobs)`` — the mux's event list interleaves
+    solver flush decisions with decode insert/step/done decisions, the
+    sequence ``tests/data/decode_golden.json`` pins byte-for-byte.
+
+    The replay engine uses ``eos_id=-1`` (token ids are non-negative,
+    so EOS never fires): every request runs exactly ``max_new`` steps
+    and the scheduling decision sequence depends only on the trace's
+    lengths — never on model floating point — keeping the golden file
+    platform-independent.  (EOS semantics are pinned separately by the
+    unit suite.)
+
+    ``lockstep=True`` is the equal-budget baseline: the SAME trace,
+    clock, mux and solver path, but the engine is NOT attached — decode
+    requests go straight to its FIFO and each tick runs one lockstep
+    pool drain (:meth:`~repro.serve.decode.DecodeEngine.run_lockstep`)
+    instead of continuous steps."""
+    from repro.serve import global_config
+    from repro.serve.decode import DecodeEngine, Request
+    cfg, params = decode_model()
+    clock = ManualClock()
+    slots = global_config.decode_slots if slots is None else slots
+    engine = DecodeEngine(cfg, params, batch=slots, max_len=max_len,
+                          eos_id=-1, clock=clock)
+    mux = SolverMux(lanes=lanes, max_wait=0.0, clock=clock,
+                    policy=OverloadPolicy(budget=None,
+                                          cost_model=CostModel()))
+    if not lockstep:
+        mux.attach_decode(engine)
+    by_tick: dict[int, list[dict]] = {}
+    for entry in trace:
+        by_tick.setdefault(int(entry["tick"]), []).append(entry)
+    last = max(by_tick) if by_tick else -1
+    requests, jobs = [], []
+    for t in range(last + 1 + drain_ticks):
+        for e in by_tick.get(t, ()):
+            deadline = e.get("deadline_ticks")
+            deadline = None if deadline is None \
+                else clock() + deadline * tick
+            if e.get("kind") == "decode":
+                r = Request(
+                    prompt=decode_prompt(e["prompt_len"], e["seed"]),
+                    max_new=e["max_new"],
+                    temperature=e.get("temperature", 0.0))
+                if lockstep:
+                    r.priority = e.get("priority", "best_effort")
+                    r.deadline = deadline
+                    engine.submit(r)
+                else:
+                    mux.submit_decode(
+                        r, deadline=deadline,
+                        priority=e.get("priority", "best_effort"))
+                requests.append(r)
+            else:
+                jobs.append(mux.submit(
+                    e["pipeline"],
+                    *job_args(e["pipeline"], e["n"], e["k"], e["seed"]),
+                    deadline=deadline,
+                    priority=e.get("priority", "best_effort")))
+        mux.poll()
+        if lockstep:
+            engine.run_lockstep()
+        clock.advance(tick)
+    mux.run()
+    if lockstep:
+        engine.run_lockstep()
+    return mux, engine, requests, jobs
+
+
+def run_decode_serve(continuous: bool, *, ticks: int = 6, lanes: int = 4,
+                     seed: int = 0) -> dict:
+    """Run the canonical mixed solver+decode trace end to end —
+    continuous per-slot batching through the mux (``continuous=True``)
+    or the preserved lockstep pool baseline at the same budget — and
+    summarize the view the ``serve_slo/decode/*`` benchmark rows gate:
+    tokens per SPMD step (the throughput the continuous path must
+    strictly win), per-phase latency, slot reuses, and ``hard_lost``
+    (hard solver jobs not done + hard decode requests not finished)
+    required zero."""
+    trace = decode_trace(ticks, seed)
+    mux, engine, requests, jobs = replay_decode(trace, lanes=lanes,
+                                                lockstep=not continuous)
+    snap = mux.metrics() if continuous else engine.metrics()
+    d = snap.decode
+    tokens = sum(len(r.out) for r in requests)
+    steps = engine.steps
+    hard_lost = sum(1 for r in requests
+                    if r.priority == "hard" and not r.done)
+    hard_lost += sum(1 for j in jobs
+                     if j.priority == "hard" and j.state != "done")
+    return {
+        "continuous": continuous,
+        "requests": len(requests),
+        "done": sum(1 for r in requests if r.done),
+        "dropped": sum(1 for r in requests if r.dropped),
+        "tokens": tokens,
+        "steps": steps,
+        "tokens_per_step": tokens / steps if steps else math.nan,
+        "hard_lost": hard_lost,
+        "solver_jobs": len(jobs),
+        "solver_done": sum(1 for j in jobs if j.state == "done"),
+        "slot_reuses": d.slot_reuses,
+        "insert_p50": d.insert.p50,
+        "prefill_p50": d.prefill.p50,
+        "generate_p50": d.generate.p50,
+        "pending": mux.pending(),
+        "events": mux.drain_events(),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=8,
@@ -633,8 +812,14 @@ def main(argv=None):
                          "admission) instead of the TTI replay and print "
                          "the end-to-end DAG observables; combine with "
                          "--fault-trace for a mid-DAG stage fault")
+    ap.add_argument("--decode", action="store_true",
+                    help="serve the canonical mixed solver+decode trace "
+                         "(continuous per-slot batching through the mux "
+                         "vs the lockstep pool baseline at the same "
+                         "budget) instead of the TTI replay and print "
+                         "the token-throughput observables")
     ap.add_argument("--ticks", type=int, default=4,
-                    help="virtual ticks in the --pusch DAG trace")
+                    help="virtual ticks in the --pusch / --decode trace")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.budget_us is not None and not args.policy:
@@ -686,6 +871,34 @@ def main(argv=None):
         for alert in summary["alerts"]:
             print(f"  ALERT {alert}")
         assert summary["hard_lost"] == 0, "hard jobs silently lost"
+        return
+
+    if args.decode:
+        cont = run_decode_serve(True, ticks=args.ticks,
+                                lanes=args.lanes, seed=args.seed)
+        base = run_decode_serve(False, ticks=args.ticks,
+                                lanes=args.lanes, seed=args.seed)
+        for s in (cont, base):
+            mode = "continuous" if s["continuous"] else "lockstep"
+            print(f"decode serve [{mode:>10}]: requests={s['requests']} "
+                  f"done={s['done']} dropped={s['dropped']} "
+                  f"tokens={s['tokens']} steps={s['steps']} "
+                  f"tokens/step={s['tokens_per_step']:.2f} "
+                  f"hard_lost={s['hard_lost']} "
+                  f"solver {s['solver_done']}/{s['solver_jobs']}")
+        print(f"  continuous: slot_reuses={cont['slot_reuses']} "
+              f"insert p50 (ticks)={cont['insert_p50']:.1f} "
+              f"prefill p50 (s)={cont['prefill_p50']:.2e} "
+              f"generate p50 (s)={cont['generate_p50']:.2e}")
+        print(f"  continuous-batching speedup: "
+              f"{cont['tokens_per_step'] / base['tokens_per_step']:.2f}x "
+              f"tokens/step at equal budget")
+        assert cont["hard_lost"] == 0, "hard jobs/requests silently lost"
+        assert base["hard_lost"] == 0, "hard jobs/requests silently lost"
+        assert cont["tokens"] == base["tokens"], \
+            "trace served different token counts across modes"
+        assert cont["tokens_per_step"] > base["tokens_per_step"], \
+            "continuous batching failed to beat the lockstep baseline"
         return
 
     rng = np.random.default_rng(args.seed)

@@ -197,21 +197,26 @@ def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int,
 
 def attention_decode(p, cfg, x, cache_k, cache_v, pos, *, rope=True):
     """One-token decode. x: (B,1,D); cache_k/v: (B,Smax,KV,Dh); pos: (B,)
-    scalar positions. Returns (out (B,1,D), new_k, new_v).
-    The cache tail beyond `pos` is masked — implicit vector masking over
-    the rectangular cache (the inductive 'live length' is pos+1)."""
+    PER-BATCH positions — each batch row (slot) carries its own position,
+    so a continuous-batching pool can mix rows mid-prefill with rows
+    deep into generation. Returns (out (B,1,D), new_k, new_v).
+    Each row's cache tail beyond its own `pos` is masked — implicit
+    vector masking over the rectangular cache (the inductive 'live
+    length' is pos+1) — which is also what makes slot reuse safe:
+    resetting a row's pos to 0 orphans its stale pages without zeroing."""
     b, _, d = x.shape
     h, kvh, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
     q, k, v = _qkv(p, cfg, x, pos[:, None], rope=rope)
-    # write the new kv at position pos (per-batch identical pos assumed)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), pos[0], axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), pos[0], axis=1)
+    # write each row's new kv at that row's own position
+    upd = jax.vmap(
+        lambda c, new, p_: jax.lax.dynamic_update_slice_in_dim(
+            c, new, p_, axis=0))
+    cache_k = upd(cache_k, k.astype(cache_k.dtype), pos)
+    cache_v = upd(cache_v, v.astype(cache_v.dtype), pos)
     smax = cache_k.shape[1]
     scale = 1.0 / np.sqrt(dh)
     logits = _gqa_logits(q, cache_k.astype(q.dtype), scale)  # (B,H,1,Smax)
-    live = jnp.arange(smax)[None, None, None, :] <= pos[0]
+    live = jnp.arange(smax)[None, None, None, :] <= pos[:, None, None, None]
     logits = jnp.where(live, logits, NEG)
     w = jax.nn.softmax(logits, axis=-1)
     o = _gqa_out(w, cache_v.astype(q.dtype))

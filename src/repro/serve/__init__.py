@@ -5,7 +5,10 @@ lane-pool accounting + batch lifecycle):
 
   core     EngineCore (+ FifoEngineCore), ManualClock, registry-driven
            pad_group
-  decode   DecodeEngine / Request       (LM continuous-batching-lite)
+  decode   DecodeEngine / Request       (LM continuous batching:
+                                         per-slot positions, paged KV
+                                         slot reuse, per-slot sampling;
+                                         attaches to SolverMux)
   solver   PipelineEngine / SolveJob    (single solver pipeline)
   mux      SolverMux / OverloadPolicy   (mixed pipelines, shape-bucketed
                                          continuous batching, deadline-
@@ -43,11 +46,11 @@ from repro.serve.cost import (CostModel, DriftStat,  # noqa: F401
                               RobustEstimator)
 from repro.serve.faults import (Fault, FaultInjector,  # noqa: F401
                                 InjectedLaunchError)
-from repro.serve.metrics import (DagStats, DropRecord,  # noqa: F401
-                                 FailRecord, FaultStats, LatencyStats,
-                                 LaunchRecord, MetricsSnapshot,
-                                 PipelineStats, Recorder, ShardStats,
-                                 shard_stats)
+from repro.serve.metrics import (DagStats, DecodeStats,  # noqa: F401
+                                 DropRecord, FailRecord, FaultStats,
+                                 LatencyStats, LaunchRecord,
+                                 MetricsSnapshot, PipelineStats, Recorder,
+                                 ShardStats, shard_stats)
 from repro.serve.mux import DagJob, OverloadPolicy, SolverMux  # noqa: F401
 from repro.serve.shard import LaneShards  # noqa: F401
 from repro.serve.solver import (PipelineEngine, SolveJob,  # noqa: F401
@@ -67,7 +70,7 @@ __all__ = [
     "EngineCore", "FifoEngineCore", "ManualClock", "pad_group",
     "DecodeEngine", "Request",
     "PipelineEngine", "SolveJob", "SolverMux", "VariantDispatcher",
-    "DagJob", "DagStats",
+    "DagJob", "DagStats", "DecodeStats",
     "OverloadPolicy", "CostModel", "DriftStat", "RobustEstimator",
     "ServeConfig", "global_config", "BucketTuner",
     "DropRecord", "FailRecord", "FaultStats", "LatencyStats",

@@ -42,6 +42,9 @@ probe_after               REPRO_SERVE_PROBE_AFTER            3.0
 demote_after              REPRO_SERVE_DEMOTE_AFTER           2
 watchdog_ratio            REPRO_SERVE_WATCHDOG_RATIO         0.0 (off)
 event_cap                 REPRO_SERVE_EVENT_CAP              100000
+decode_slots              REPRO_SERVE_DECODE_SLOTS           4
+decode_max_len            REPRO_SERVE_DECODE_MAX_LEN         128
+decode_steps_per_poll     REPRO_SERVE_DECODE_STEPS_PER_POLL  8
 ========================  =================================  ========
 
 * ``calibrate`` — master switch for ONLINE re-fitting: with it off, a
@@ -130,6 +133,16 @@ event_cap                 REPRO_SERVE_EVENT_CAP              100000
   hit the oldest events are dropped (``drain_events()`` reports how
   many) so a long-running serve loop cannot leak memory through its
   event log.
+* ``decode_slots`` — default continuous-batching slot count (the pool
+  width) for :class:`repro.serve.decode.DecodeEngine` instances built
+  by the trace-replay / benchmark entry points.
+* ``decode_max_len`` — default per-slot KV-cache length (tokens) for
+  the same entry points; a request's ``max_new`` is clamped so prompt
+  plus output always fits its slot's pages.
+* ``decode_steps_per_poll`` — how many continuous-batching decode
+  steps one ``SolverMux.poll()`` runs at most once a decode engine is
+  attached: the fairness lever between token traffic and solver
+  flushes on the shared front-end (``run()`` drains are unbounded).
 """
 from __future__ import annotations
 
@@ -208,6 +221,11 @@ class ServeConfig:
         self.watchdog_ratio = _env_float(
             "REPRO_SERVE_WATCHDOG_RATIO", 0.0)
         self.event_cap = _env_int("REPRO_SERVE_EVENT_CAP", 100000)
+        # ---- continuous-batching decode ----
+        self.decode_slots = _env_int("REPRO_SERVE_DECODE_SLOTS", 4)
+        self.decode_max_len = _env_int("REPRO_SERVE_DECODE_MAX_LEN", 128)
+        self.decode_steps_per_poll = _env_int(
+            "REPRO_SERVE_DECODE_STEPS_PER_POLL", 8)
         return self
 
 

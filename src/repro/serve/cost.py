@@ -73,6 +73,11 @@ log = logging.getLogger(__name__)
 # online loop replaces them with measured values.
 DEFAULT_SEC_PER_FLOP = 2e-9
 DEFAULT_LAUNCH_OVERHEAD = 5e-5
+# Decode pricing phases (maxtext's experimental_decode_microbenchmark
+# shape): "prefill" steps consume prompt tokens, "generate" steps
+# consume previously generated tokens, "insert" is the slot-assignment
+# bookkeeping between them (no model FLOPs — pure fixed cost).
+DECODE_PHASES = ("prefill", "insert", "generate")
 # Extra fixed cost per additional mesh shard participating in a sharded
 # flush (collective setup + multi-device dispatch) — 20% of the launch
 # overhead per shard until the sharded bench rows calibrate the real
@@ -284,6 +289,21 @@ class CostModel:
             log.warning("cost model: malformed bench baseline %s (%s); "
                         "falling back to uncalibrated defaults", path, e)
             return cls(**kwargs)
+        # decode phase rows (optional — older baselines lack them): each
+        # carries one phase's measured wall + token FLOPs; the median
+        # rate lands in the table under the ("decode", phase) pseudo-pair
+        # (see decode_rate).  Zero-FLOP phases (insert) stay uncalibrated
+        # — they are priced as pure overhead.
+        try:
+            for rec in payload.get("decode", ()):
+                flops = rec.get("flops", 0.0)
+                wall = rec.get("wall_us", 0.0)
+                if flops > 0.0 and wall > 0.0:
+                    key = ("decode", rec["phase"])
+                    rates.setdefault(key, []).append(wall * 1e-6 / flops)
+        except (KeyError, TypeError, AttributeError) as e:
+            log.warning("cost model: malformed decode rows in %s (%s); "
+                        "ignoring them", path, e)
         if not rates:
             log.warning("cost model: bench baseline %s has no usable "
                         "variant rows; falling back to uncalibrated "
@@ -369,6 +389,53 @@ class CostModel:
                 pipeline, variant, shapes)
         return self.overhead(mesh) + math.ceil(lanes / mesh) \
             * self.lane_cost(pipeline, variant, shapes)
+
+    # ---------------- decode pricing ----------------
+
+    def decode_rate(self, phase: str) -> float:
+        """sec/FLOP of one decode ``phase`` (:data:`DECODE_PHASES`).
+        Decode rates live in the same ``table`` under the pseudo-pair
+        ``("decode", phase)``, so calibration source ("default" /
+        "bench" / "online") and drift reporting come for free from the
+        machinery above."""
+        return self.table.get(("decode", phase), self.sec_per_flop)
+
+    def decode_cost(self, phase: str, flops: float = 0.0) -> float:
+        """Seconds for one pool-wide SPMD decode step of ``phase``:
+        the fixed launch overhead plus the step's token FLOPs (active
+        slots x per-token FLOPs from the decode spec) at the phase's
+        rate.  ``insert`` carries no FLOPs — it is priced as pure
+        overhead."""
+        return self.launch_overhead + flops * self.decode_rate(phase)
+
+    def observe_decode(self, phase: str, flops: float,
+                       measured: float) -> None:
+        """Feed one measured decode step back into the model: drift is
+        tracked under the ``("decode", phase)`` pseudo-pair (surfacing
+        as ``"decode/<phase>"`` in :meth:`drift`), and — when adaptive —
+        the phase's sec/FLOP rate is re-fit through the same robust
+        estimator stream the solver rates use.  The shared launch
+        overhead is NOT re-fit from decode steps: solver flushes own
+        that estimator, and a decode step's fixed cost is far smaller
+        than a padded grid launch's."""
+        if measured is None or not math.isfinite(measured) \
+                or measured <= 0.0:
+            return
+        pair = ("decode", phase)
+        predicted = self.decode_cost(phase, flops)
+        drift = self._drift.get((*pair, 1))
+        if drift is None:
+            drift = self._drift[(*pair, 1)] = _PairDrift()
+        drift.observe(predicted / measured, self.config.calibration_alpha)
+        if not self.adaptive or flops <= 0.0:
+            return
+        est = self._rate_est.get(pair)
+        if est is None:
+            est = self._rate_est[pair] = self._estimator(
+                self.decode_rate(phase), self.config.rate_floor)
+        rate_sample = (measured - self.launch_overhead) / flops
+        if est.observe(rate_sample) and est.warmed:
+            self.table[pair] = est.value
 
     # ---------------- the online loop ----------------
 

@@ -228,6 +228,41 @@ class DagStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class DecodeStats:
+    """Aggregate view of continuous-batching decode traffic
+    (``MetricsSnapshot.decode``): per-phase latency in the
+    maxtext-microbenchmark shape — **insert** (submit -> slot assigned,
+    scheduling-clock queue wait), **prefill** (slot assigned -> final
+    prompt token consumed, wall seconds) and **generate** (first output
+    token -> request done, wall seconds) — plus the step/token counters
+    the continuous-vs-lockstep throughput comparison is judged by.
+    All-empty (the default) when no decode engine is attached, so the
+    block's shape is always present."""
+
+    requests: int = 0
+    """Requests that reached ``done`` (EOS or ``max_new``)."""
+    tokens: int = 0
+    """Output tokens generated across all requests."""
+    steps: int = 0
+    """Pool-wide SPMD decode steps executed."""
+    slot_reuses: int = 0
+    """Inserts into a slot that previously held another request — the
+    paged-KV reuse counter (no cache rebuild happened on these)."""
+    shed: int = 0
+    """Queued best-effort requests dropped past their deadline."""
+    insert: LatencyStats = dataclasses.field(
+        default_factory=lambda: LatencyStats.of([]))
+    prefill: LatencyStats = dataclasses.field(
+        default_factory=lambda: LatencyStats.of([]))
+    generate: LatencyStats = dataclasses.field(
+        default_factory=lambda: LatencyStats.of([]))
+    tokens_per_step: float = math.nan
+    """Continuous-batching throughput: generated tokens per SPMD step
+    (the pool width is its ceiling; lockstep burns steps on idle lanes
+    and trailing drain, pulling it down)."""
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineStats:
     """Aggregate SLO view of one pipeline's traffic."""
 
@@ -307,6 +342,9 @@ class MetricsSnapshot:
     dags: dict = dataclasses.field(default_factory=dict)
     """``dag name -> DagStats`` for DAG jobs served via
     ``SolverMux.submit_dag`` (empty when no DAGs were submitted)."""
+    decode: DecodeStats = dataclasses.field(default_factory=DecodeStats)
+    """Continuous-batching decode traffic (see :class:`DecodeStats`).
+    All-zero when no decode engine shares this recorder."""
 
     def __getitem__(self, pipeline: str) -> PipelineStats:
         return self.pipelines[pipeline]
@@ -329,6 +367,13 @@ class Recorder:
         self._retries: dict[str, int] = collections.defaultdict(int)
         self._dag_submits: dict[str, int] = collections.defaultdict(int)
         self._dag_records: list[tuple[str, float, float, str, str]] = []
+        self._decode_phases: dict[str, list[float]] = \
+            collections.defaultdict(list)
+        self._decode_steps = 0
+        self._decode_tokens = 0
+        self._decode_requests = 0
+        self._decode_reuses = 0
+        self._decode_shed = 0
 
     def record_launch(self, pipeline: str, shape: tuple, real: int,
                       padded: int, t: float, variant: str = "base",
@@ -372,6 +417,25 @@ class Recorder:
         / ``dropped``); latency folds only over ``done``."""
         self._dag_records.append((dag, submitted_at, finished_at, state,
                                   priority))
+
+    def record_decode_phase(self, phase: str, seconds: float) -> None:
+        """One per-request phase latency sample: ``insert`` /
+        ``prefill`` / ``generate`` (see :class:`DecodeStats`)."""
+        self._decode_phases[phase].append(float(seconds))
+
+    def record_decode_step(self, tokens: int) -> None:
+        """One pool-wide SPMD decode step that generated ``tokens``."""
+        self._decode_steps += 1
+        self._decode_tokens += int(tokens)
+
+    def record_decode_insert(self, reused: bool) -> None:
+        self._decode_reuses += bool(reused)
+
+    def record_decode_request(self) -> None:
+        self._decode_requests += 1
+
+    def record_decode_shed(self) -> None:
+        self._decode_shed += 1
 
     def snapshot(self) -> MetricsSnapshot:
         per: dict[str, PipelineStats] = {}
@@ -437,9 +501,22 @@ class Recorder:
                 latency=LatencyStats.of(lat),
                 latency_by_priority={p: LatencyStats.of(v)
                                      for p, v in sorted(by_prio.items())})
+        decode = DecodeStats(
+            requests=self._decode_requests,
+            tokens=self._decode_tokens,
+            steps=self._decode_steps,
+            slot_reuses=self._decode_reuses,
+            shed=self._decode_shed,
+            insert=LatencyStats.of(self._decode_phases.get("insert", [])),
+            prefill=LatencyStats.of(self._decode_phases.get("prefill", [])),
+            generate=LatencyStats.of(
+                self._decode_phases.get("generate", [])),
+            tokens_per_step=(self._decode_tokens / self._decode_steps)
+            if self._decode_steps else math.nan)
         return MetricsSnapshot(
             pipelines=per,
             dags=dags,
+            decode=decode,
             launches=tuple(self._launches),
             total_jobs=sum(len(v) for v in self._jobs.values()),
             total_launches=len(self._launches),

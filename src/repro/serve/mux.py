@@ -449,6 +449,9 @@ class SolverMux(EngineCore):
         self._pools: dict[str, _LanePool] = {}
         self._seq = 0
         self._dags: list[DagJob] = []
+        # token-decode front-end (attach_decode); None = solver-only mux
+        self.decode = None
+        self._decode_steps_per_poll = global_config.decode_steps_per_poll
         self.events: list[dict] = []
         # ---- launch supervision (module docstring) ----
         # injector stays None with no trace configured, keeping every
@@ -689,6 +692,109 @@ class SolverMux(EngineCore):
         if self.tuner is not None:
             self.tuner.note_launch(spec.name, lanes, measured)
 
+    # ---------------- token decode traffic ----------------
+
+    def attach_decode(self, engine) -> None:
+        """Register a :class:`repro.serve.decode.DecodeEngine` as this
+        mux's token-traffic front-end, so ONE scheduler owns both
+        solver and decode traffic (the hierarchical-scheduler shape of
+        the wireless-modem related work):
+
+        * the engine adopts the mux's recorder and both clocks — decode
+          launches, per-request latencies and per-phase samples land in
+          the same :meth:`metrics` snapshot (``snapshot.decode`` plus a
+          ``"decode"`` entry in ``snapshot.pipelines``);
+        * engine lifecycle events (``decode_insert`` / ``decode_done``)
+          are folded into the mux event log, so virtual-clock replays
+          pin decode scheduling decisions byte-for-byte like solver
+          flushes;
+        * measured step wall-clock feeds
+          :meth:`repro.serve.cost.CostModel.observe_decode`, pricing
+          decode phases through the same drift/calibration machinery.
+
+        :meth:`poll` then serves up to ``decode_steps_per_poll``
+        continuous-batching steps per round under the attached
+        :class:`OverloadPolicy` (budget-priced, expired best-effort
+        shed, hard-deadline decode never shed or deferred), and
+        :meth:`run` drains decode alongside solver buckets."""
+        if self.decode is not None:
+            raise ValueError("a decode engine is already attached")
+        engine.recorder = self.recorder
+        engine.clock = self.clock
+        engine.wall = self.wall
+        engine.event_cb = lambda kind, t, **f: self._event(kind, t=t, **f)
+        cm = self.cost_model
+        if cm is not None:
+            engine.observe_cb = cm.observe_decode
+        self.decode = engine
+        self._event("decode_attach", t=self.clock(),
+                    spec=engine.spec.name, slots=engine.lanes,
+                    max_len=engine.max_len)
+
+    def submit_decode(self, request, *, deadline: float | None = None,
+                      priority: str = "best_effort"):
+        """Submit one decode :class:`~repro.serve.decode.Request` to the
+        attached engine under the mux's admission classes: ``priority``
+        and ``deadline`` mean exactly what they mean for
+        :meth:`submit` — a hard request is never shed; an expired
+        best-effort request still queued at a policy poll is dropped.
+        The request joins the mux's global ``seq`` numbering so decode
+        and solver events interleave unambiguously in the event log."""
+        if self.decode is None:
+            raise RuntimeError("no decode engine attached; call "
+                               "attach_decode() first")
+        if priority not in SolveJob.PRIORITIES:
+            raise ValueError(f"priority must be one of "
+                             f"{SolveJob.PRIORITIES}, got {priority!r}")
+        self._seq += 1
+        request.seq = self._seq
+        request.priority = priority
+        request.deadline = deadline
+        return self.decode.submit(request)
+
+    def _poll_decode(self, now: float) -> list:
+        """One decode service round: shed expired best-effort queue
+        entries (hard never shed), then run up to
+        ``decode_steps_per_poll`` continuous-batching steps, each priced
+        through the cost model and admitted against the policy budget.
+        Decode budget is accounted separately from the solver flush
+        budget within a poll — the same per-poll figure, so a saturated
+        solver round cannot silently starve token traffic to zero — and
+        a pending hard-deadline request overrides budget exhaustion
+        (deferring it would trade a hard SLO for best-effort lane time).
+        """
+        eng = self.decode
+        pol = self.policy
+        if pol is not None and pol.shed:
+            for r in eng.shed_expired(now):
+                self.recorder.record_drop("decode", now, r.priority,
+                                          "expired")
+                self.recorder.record_decode_shed()
+                self._event("drop", t=now, pipeline="decode", seq=r.seq,
+                            deadline=r.deadline, reason="expired")
+        cm = self.cost_model
+        budget = math.inf if pol is None or pol.budget is None \
+            else pol.budget
+        spent, steps = 0.0, 0
+        done: list = []
+        while eng.has_work() and steps < self._decode_steps_per_poll:
+            active = eng.occupied() or min(eng.pending(), eng.lanes)
+            price = cm.decode_cost("generate",
+                                   active * eng.token_flops) \
+                if cm is not None else 0.0
+            if spent + price > budget and not eng.hard_waiting():
+                self._event("decode_defer", t=now, queued=eng.pending(),
+                            active=eng.occupied(), cost=_round(price))
+                break
+            done.extend(eng.step())
+            spent += price
+            steps += 1
+        if steps:
+            self._event("decode_step", t=now, steps=steps,
+                        done=len(done), active=eng.occupied(),
+                        queued=eng.pending(), cost=_round(spent))
+        return done
+
     def metrics(self):
         """Recorder snapshot plus — when a cost model is attached — the
         per-(pipeline, variant) drift stats, worst offender, and
@@ -730,7 +836,12 @@ class SolverMux(EngineCore):
         return snap
 
     def pending(self) -> int:
-        return sum(p.queued() for p in self._pools.values())
+        n = sum(p.queued() for p in self._pools.values())
+        if self.decode is not None:
+            # queued requests plus occupied slots: both are unfinished
+            # work run() is on the hook to drain
+            n += self.decode.pending() + self.decode.occupied()
+        return n
 
     def drain_events(self) -> list[dict]:
         """Return and clear the scheduling-decision event log.  When the
@@ -1139,6 +1250,8 @@ class SolverMux(EngineCore):
             done = self._poll_policy(now)
             if self._dags:
                 self._advance_dags(now)
+            if self.decode is not None:
+                self._poll_decode(now)
             return done
         done: list[SolveJob] = []
         for pool, key in self._sorted_buckets():
@@ -1152,6 +1265,8 @@ class SolverMux(EngineCore):
                                                now=now))
         if self._dags:
             self._advance_dags(now)
+        if self.decode is not None:
+            self._poll_decode(now)
         return done
 
     def run(self) -> list[SolveJob]:
@@ -1161,7 +1276,10 @@ class SolverMux(EngineCore):
         in flight the drain loops: each pass's completed stages unlock
         their consumers, which the next pass serves, until no bucket
         flushes and no DAG advances (DAG-free muxes take exactly one
-        pass — identical to the pre-DAG drain)."""
+        pass — identical to the pre-DAG drain).  An attached decode
+        engine is drained the same way: unbudgeted continuous-batching
+        steps interleave with the flush passes until its queue and
+        every slot are empty."""
         done: list[SolveJob] = []
         while True:
             flushed = False
@@ -1171,7 +1289,11 @@ class SolverMux(EngineCore):
                 flushed = flushed or bool(served)
             advanced = self._advance_dags(self.clock()) \
                 if self._dags else False
-            if not flushed and not advanced:
+            stepped = False
+            if self.decode is not None and self.decode.has_work():
+                self.decode.step()
+                stepped = True
+            if not flushed and not advanced and not stepped:
                 return done
 
     # ---------------- overload policy ----------------

@@ -1,0 +1,39 @@
+"""Regenerate ``decode_trace.json`` + ``decode_golden.json``.
+
+Run after any INTENTIONAL continuous-batching change (slot insertion
+order, decode admission pricing, decode event schema), then review the
+golden diff like any other code change:
+
+  PYTHONPATH=src python tests/data/regen_decode_golden.py
+
+The replay parameters here must stay in sync with
+``tests/test_decode_serve.py::test_golden_decode_replay_event_sequence``.
+The golden event stream is the proof artifact for mux-owned token
+traffic: it pins the interleaving of solver flushes with decode
+insert/step/done decisions, slot reuse order, and budget-priced decode
+admission on the virtual clock.  The replay engine uses ``eos_id=-1``
+so the sequence depends only on the trace's prompt/output lengths,
+never on model floating point — the file is platform-independent.
+"""
+import json
+import pathlib
+
+from repro.launch.serve_solvers import decode_trace, replay_decode
+
+DATA = pathlib.Path(__file__).parent
+
+def main():
+    trace = decode_trace(4, seed=0)
+    (DATA / "decode_trace.json").write_text(
+        json.dumps(trace, indent=1) + "\n")
+    mux, engine, requests, jobs = replay_decode(trace)
+    events = mux.drain_events()
+    out = DATA / "decode_golden.json"
+    out.write_text(json.dumps(events, indent=1) + "\n")
+    kinds = sorted({e["event"] for e in events})
+    print(f"wrote {out}: {len(events)} events, kinds={kinds}, "
+          f"requests done={sum(r.done for r in requests)}/{len(requests)}, "
+          f"solver done={sum(j.state == 'done' for j in jobs)}/{len(jobs)}")
+
+if __name__ == "__main__":
+    main()

@@ -47,7 +47,8 @@ except ModuleNotFoundError:
 
 __all__ = [
     "HAVE_HYPOTHESIS", "fuzzed", "integers", "floats", "sampled",
-    "traces", "dag_traces", "cost_streams", "fault_streams",
+    "traces", "dag_traces", "decode_traffic", "cost_streams",
+    "fault_streams",
     "TRACE_PIPELINES", "TRACE_SIZES",
     "spd_system", "tall_system", "channel_planes",
 ]
@@ -89,6 +90,17 @@ def dag_traces(max_len: int = 6):
     built deterministically from the entry index, so a failing trace
     shrinks to a reproducible scenario."""
     return ("dag_traces", max_len)
+
+
+def decode_traffic(max_len: int = 8):
+    """Random decode request traffic for the continuous-batching
+    invariants (tests/test_decode_serve.py): lists of
+    ``(prompt_len, max_new, temp_scaled, gap_ticks)`` entries where
+    ``temp_scaled / 10`` is the sampling temperature (0 = greedy) and
+    ``gap_ticks`` is the virtual-clock gap before the next arrival.
+    Prompt tokens are built deterministically from the entry index, so
+    a failing traffic pattern shrinks to a reproducible scenario."""
+    return ("decode_traffic", max_len)
 
 
 def cost_streams(max_len: int = 64, lo: float = 1e-9, hi: float = 10.0):
@@ -133,6 +145,13 @@ def _resolve(spec):
             _st.integers(min_value=0, max_value=8),   # 0 = no deadline
             _st.integers(min_value=0, max_value=2),   # arrival gap
             _st.booleans())                           # chained
+        return _st.lists(entry, min_size=1, max_size=spec[1])
+    if kind == "decode_traffic":
+        entry = _st.tuples(
+            _st.integers(min_value=1, max_value=6),   # prompt_len
+            _st.integers(min_value=0, max_value=8),   # max_new
+            _st.sampled_from((0, 0, 7, 13)),          # temperature * 10
+            _st.integers(min_value=0, max_value=2))   # arrival gap
         return _st.lists(entry, min_size=1, max_size=spec[1])
     if kind == "fault_streams":
         blackhole = _st.lists(_st.fixed_dictionaries({

@@ -1,0 +1,460 @@
+"""Continuous-batching decode serving: characterization + golden replay.
+
+Four layers, mirroring tests/test_dag_serve.py:
+
+* **engine characterization** — greedy determinism across pool
+  compositions, per-request EOS / ``max_new`` stops, paged-slot cache
+  non-contamination, and single-request bit-identity between the
+  preserved lockstep path and the continuous per-slot path.
+* **per-slot sampling regression** — pins BOTH sides of the historical
+  bug: under ``run_lockstep`` one sampling pool mate switches the whole
+  pool to a shared categorical stream (a co-batched greedy request's
+  output changes); under the continuous path greedy slots never touch
+  RNG and are bit-identical solo or co-batched.
+* **mux integration** — decode admission through ``SolverMux``
+  (attach/submit validation, expired best-effort shedding, hard never
+  shed) plus the golden mixed solver+decode trace replayed byte-for-byte
+  on the virtual clock, and the committed-trace throughput gate:
+  continuous batching strictly beats lockstep tokens/step at equal
+  budget with zero hard jobs lost.
+* **fuzzed properties** (hypothesis-optional) — random decode traffic:
+  every request reaches a terminal state with clean slot accounting,
+  greedy outputs are independent of co-batched traffic, and hard
+  requests are never lost through the mux.
+"""
+import json
+import pathlib
+
+import jax
+import pytest
+
+from repro.launch.serve_solvers import (decode_model, decode_prompt,
+                                        decode_trace, replay_decode,
+                                        run_decode_serve)
+from repro.serve import CostModel, ManualClock, OverloadPolicy, SolverMux
+from repro.serve.decode import DecodeEngine, Request
+from strategies import decode_traffic, fuzzed, integers
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """Shared standalone engine: ``eos_id=-1`` (token ids are
+    non-negative, so EOS never fires) makes every request run exactly
+    ``max_new`` steps — tests that need EOS semantics override
+    ``engine.eos`` in place (it is only read host-side)."""
+    cfg, params = decode_model()
+    return DecodeEngine(cfg, params, batch=4, max_len=64, eos_id=-1)
+
+
+def _solo(engine, prompt, max_new=5, temperature=0.0):
+    r = engine.submit(Request(prompt=list(prompt), max_new=max_new,
+                              temperature=temperature))
+    engine.run()
+    return r.out
+
+
+# ---------------- engine characterization ----------------
+
+def test_greedy_deterministic_across_pool_compositions(engine):
+    """A greedy request's output is a function of its prompt alone —
+    identical solo, co-batched with other greedy traffic, and co-batched
+    with SAMPLING traffic (per-slot RNG keys leave greedy slots
+    untouched)."""
+    alone = _solo(engine, [9, 8, 7, 6])
+    r1 = engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
+    engine.submit(Request(prompt=[30, 31, 32], max_new=4))
+    engine.submit(Request(prompt=[40], max_new=6))
+    engine.run()
+    r2 = engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
+    engine.submit(Request(prompt=[3, 4], max_new=6, temperature=1.0))
+    engine.submit(Request(prompt=[5], max_new=6, temperature=0.7))
+    engine.run()
+    assert alone == r1.out == r2.out
+
+
+def test_eos_stops_generation_per_request(engine):
+    """EOS is honored per request: pick a token the model actually
+    generates, declare it EOS, and the request stops there — pool mates
+    stop on their OWN terms (their own EOS draw or max_new)."""
+    base = _solo(engine, [11, 12, 13], max_new=6)
+    assert len(base) == 6              # eos=-1 never fires
+    engine.eos = base[2]
+    try:
+        r = engine.submit(Request(prompt=[11, 12, 13], max_new=6))
+        mate = engine.submit(Request(prompt=[40], max_new=4))
+        engine.run()
+        assert r.out == base[:3]       # stopped AT the eos token
+        assert r.done and mate.done
+        assert len(mate.out) == 4 or mate.out[-1] == engine.eos
+    finally:
+        engine.eos = -1
+
+
+def test_max_new_honored_per_request(engine):
+    reqs = [engine.submit(Request(prompt=[2 + i], max_new=1 + i))
+            for i in range(6)]
+    engine.run()
+    assert [len(r.out) for r in reqs] == [1, 2, 3, 4, 5, 6]
+    assert all(r.done for r in reqs)
+
+
+def test_max_new_clamped_to_cache(engine):
+    r = engine.submit(Request(prompt=[7, 8], max_new=10_000))
+    assert r.max_new == engine.max_len - 2
+    engine._queue.remove(r)            # don't actually run 62 steps
+    with pytest.raises(ValueError):
+        engine.submit(Request(prompt=[], max_new=1))
+    with pytest.raises(ValueError):
+        engine.submit(Request(prompt=[1] * 64, max_new=1))
+
+
+def test_paged_slot_reuse_does_not_contaminate(engine):
+    """Slot reuse never re-reads stale cache pages: after DEEP pool
+    traffic leaves long stale tails in every slot's cache, a fresh
+    request reusing a slot (position reset to 0, no cache zeroing)
+    produces the same output as before the pollution."""
+    before = _solo(engine, [21, 22], max_new=4)
+    for i in range(5):                 # deep, slot-reusing pollution
+        engine.submit(Request(prompt=[3 + i] * 8, max_new=12))
+    engine.run()
+    assert _solo(engine, [21, 22], max_new=4) == before
+
+
+def test_single_request_lockstep_bit_identity(engine):
+    """One greedy request: the continuous per-slot path and the
+    preserved lockstep pool path are bit-identical."""
+    cont = _solo(engine, [9, 4, 2], max_new=5)
+    r = engine.submit(Request(prompt=[9, 4, 2], max_new=5))
+    engine.run_lockstep()
+    assert r.out == cont
+
+
+def test_continuous_retires_heterogeneous_batch_in_fewer_steps(engine):
+    """The tentpole economics on one pool: with more heterogeneous
+    requests than slots, the lockstep path pays for every generation's
+    longest member plus the pool barrier, while the continuous path
+    backfills freed slots mid-flight."""
+    mk = lambda: [Request(prompt=[2 + i] * (1 + i % 4),
+                          max_new=1 + 2 * (i % 4)) for i in range(8)]
+    engine.steps = 0
+    for r in mk():
+        engine.submit(r)
+    engine.run()
+    cont_steps = engine.steps
+    engine.steps = 0
+    for r in mk():
+        engine.submit(r)
+    engine.run_lockstep()
+    assert cont_steps < engine.steps
+
+
+# ---------------- per-slot sampling regression ----------------
+
+def test_lockstep_pool_sampling_regression(engine):
+    """The OLD failure mode, pinned: under ``run_lockstep`` a single
+    sampling pool mate switches the WHOLE pool to one shared categorical
+    stream, changing a co-batched greedy request's output.  The
+    continuous path fixes this (greedy slots select argmax per slot, no
+    RNG consumed) — pinned in
+    test_greedy_deterministic_across_pool_compositions above."""
+    engine.key = jax.random.PRNGKey(0)
+    solo = engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
+    engine.run_lockstep()
+    engine.key = jax.random.PRNGKey(0)
+    greedy = engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
+    engine.submit(Request(prompt=[3, 4], max_new=5, temperature=1.0))
+    engine.run_lockstep()
+    assert greedy.out != solo.out      # the bug: pool-wide sampling
+
+
+def test_sampling_requests_have_private_streams(engine):
+    """Two identical sampling requests draw from per-request RNG streams
+    (seq folded into the key), so co-batching them yields independent
+    draws — while re-running the SAME request seq reproduces its
+    stream."""
+    a = engine.submit(Request(prompt=[5, 6], max_new=8, temperature=1.0))
+    b = engine.submit(Request(prompt=[5, 6], max_new=8, temperature=1.0))
+    engine.run()
+    assert a.out != b.out              # private streams, not shared
+    replay = Request(prompt=[5, 6], max_new=8, temperature=1.0)
+    replay.seq = a.seq                 # pin the stream explicitly
+    engine.submit(replay)
+    engine.run()
+    assert replay.out == a.out         # same seq -> same draws
+
+
+# ---------------- slot accounting ----------------
+
+def test_slot_accounting_never_leaks(engine):
+    """After any drain: no request holds a slot, the queue is empty,
+    and every submitted request reached a terminal state."""
+    reqs = [engine.submit(Request(prompt=[2 + i], max_new=i % 3))
+            for i in range(9)]         # includes max_new=0 requests
+    done = engine.run()
+    assert engine.occupied() == 0 and engine.pending() == 0
+    assert not engine.has_work()
+    assert all(r is None for r in engine._slot_req)
+    assert sorted(r.seq for r in done) == sorted(r.seq for r in reqs)
+    assert all(r.done and not r.dropped for r in reqs)
+
+
+def test_shed_expired_drops_only_queued_best_effort(engine):
+    """Expired best-effort requests are shed from the QUEUE only: hard
+    requests and requests already holding a slot are never shed."""
+    hard = engine.submit(Request(prompt=[2], max_new=2, priority="hard",
+                                 deadline=-1.0))
+    engine.step()                      # hard takes a slot
+    in_slot = engine.submit(Request(prompt=[3], max_new=2,
+                                     deadline=-1.0))
+    engine.step()                      # expired best-effort in a slot
+    queued = engine.submit(Request(prompt=[4], max_new=2, deadline=-1.0))
+    live = engine.submit(Request(prompt=[5], max_new=2, deadline=1e9))
+    shed = engine.shed_expired(engine.clock())
+    assert shed == [queued] and queued.dropped
+    engine.run()
+    assert hard.done and in_slot.done and live.done and not queued.done
+
+
+# ---------------- mux integration ----------------
+
+def _mux(engine, budget=None):
+    clock = ManualClock()
+    engine.clock = clock
+    mux = SolverMux(lanes=4, max_wait=0.0, clock=clock,
+                    policy=OverloadPolicy(budget=budget,
+                                          cost_model=CostModel()))
+    mux.attach_decode(engine)
+    return mux, clock
+
+
+def _fresh_engine(batch=4):
+    cfg, params = decode_model()
+    return DecodeEngine(cfg, params, batch=batch, max_len=64, eos_id=-1)
+
+
+def test_mux_decode_admission_validation(engine):
+    mux = SolverMux(lanes=4)
+    with pytest.raises(RuntimeError):
+        mux.submit_decode(Request(prompt=[2]))
+    eng = _fresh_engine()
+    mux.attach_decode(eng)
+    with pytest.raises(ValueError):
+        mux.submit_decode(Request(prompt=[2]), priority="urgent")
+    with pytest.raises(ValueError):
+        mux.attach_decode(eng)         # double attach
+
+
+def test_mux_serves_decode_alongside_solvers():
+    """One poll loop serves lane traffic AND token traffic: solver jobs
+    flush, decode requests stream through slots, and both land in the
+    same snapshot with decode per-phase latency populated."""
+    eng = _fresh_engine()
+    mux, clock = _mux(eng)
+    from repro.launch.serve_solvers import job_args
+    jobs = [mux.submit("mmse_equalize", *job_args("mmse_equalize", 8, 2, i))
+            for i in range(2)]
+    reqs = [mux.submit_decode(Request(prompt=[2 + i], max_new=3),
+                              priority="hard")
+            for i in range(2)]
+    for _ in range(4):
+        mux.poll()
+        clock.advance(1.0)
+    mux.run()
+    assert all(j.state == "done" for j in jobs)
+    assert all(r.done for r in reqs)
+    snap = mux.metrics()
+    assert snap.decode.requests == 2 and snap.decode.tokens == 6
+    assert snap.decode.insert.count == 2
+    assert snap.decode.prefill.count == 2
+    assert snap.decode.generate.count == 2
+    assert snap.decode.tokens_per_step > 0
+    kinds = {e["event"] for e in mux.drain_events()}
+    assert {"decode_attach", "decode_insert", "decode_step",
+            "decode_done", "flush"} <= kinds
+
+
+def test_mux_sheds_expired_best_effort_decode_never_hard():
+    """Deadline admission matches the solver rules: queued best-effort
+    decode past its deadline is shed (recorded + evented); hard decode
+    is admitted even when the per-poll budget is exhausted."""
+    eng = _fresh_engine(batch=1)       # 1 slot forces queueing
+    mux, clock = _mux(eng, budget=1e-12)   # budget never covers a step
+    # long enough to hold the slot through the first poll's step
+    # allowance, so the stale request is still queued when it expires
+    blocker = mux.submit_decode(Request(prompt=[2], max_new=8),
+                                priority="hard")
+    stale = mux.submit_decode(Request(prompt=[3], max_new=2),
+                              deadline=0.5)
+    hard = mux.submit_decode(Request(prompt=[4], max_new=2),
+                             priority="hard", deadline=0.5)
+    for _ in range(8):
+        mux.poll()
+        clock.advance(1.0)
+    assert stale.dropped and not stale.done
+    assert blocker.done and hard.done  # hard overrode the zero budget
+    snap = mux.metrics()
+    assert snap.decode.shed == 1
+    assert snap["decode"].dropped == 1
+    events = mux.drain_events()
+    assert any(e["event"] == "drop" and e.get("pipeline") == "decode"
+               for e in events)
+    assert mux.pending() == 0
+
+
+def test_mux_budget_defers_best_effort_decode():
+    eng = _fresh_engine()
+    mux, clock = _mux(eng, budget=1e-12)
+    r = mux.submit_decode(Request(prompt=[2], max_new=2))
+    mux.poll()                         # deferred: budget exhausted
+    assert not r.done
+    events = mux.drain_events()
+    assert any(e["event"] == "decode_defer" for e in events)
+    mux.run()                          # drain ignores the poll budget
+    assert r.done
+
+
+# ---------------- golden mixed solver+decode replay ----------------
+
+def test_golden_trace_matches_generator():
+    committed = json.loads((DATA / "decode_trace.json").read_text())
+    assert committed == decode_trace(4, seed=0)
+
+
+def test_golden_decode_replay_event_sequence():
+    """Replay the committed mixed trace on the virtual clock and compare
+    the full mux event stream byte-for-byte: solver flushes interleaved
+    with decode insert/step/done decisions, slot reuse order and priced
+    decode admission are all pinned.  (eos_id=-1 in the replay keeps the
+    sequence independent of model floating point.)"""
+    trace = json.loads((DATA / "decode_trace.json").read_text())
+    mux, eng, requests, jobs = replay_decode(trace)
+    assert all(r.done for r in requests)
+    assert all(j.state == "done" for j in jobs)
+    assert mux.pending() == 0
+    got = json.dumps(mux.drain_events(), indent=1) + "\n"
+    assert got == (DATA / "decode_golden.json").read_text(), \
+        "decode event stream diverged; if intentional, run " \
+        "tests/data/regen_decode_golden.py and review the diff"
+
+
+def test_continuous_beats_lockstep_on_committed_trace():
+    """The acceptance gate, as a test: on the committed trace the
+    continuous path serves the SAME tokens in strictly fewer SPMD steps
+    than the lockstep baseline, with zero hard jobs/requests lost."""
+    cont = run_decode_serve(True, ticks=4)
+    base = run_decode_serve(False, ticks=4)
+    assert cont["hard_lost"] == 0 and base["hard_lost"] == 0
+    assert cont["tokens"] == base["tokens"] > 0
+    assert cont["steps"] < base["steps"]
+    assert cont["tokens_per_step"] > base["tokens_per_step"]
+    assert cont["slot_reuses"] > 0
+    assert cont["pending"] == 0
+
+
+# ---------------- fuzzed properties ----------------
+
+def _traffic_requests(entries):
+    return [Request(prompt=decode_prompt(plen, 17 * i), max_new=max_new,
+                    temperature=t10 / 10)
+            for i, (plen, max_new, t10, _gap) in enumerate(entries)]
+
+
+GRID_TRAFFIC = [
+    [(1, 0, 0, 0)],
+    [(3, 2, 0, 1), (1, 5, 13, 0), (2, 0, 7, 2), (6, 3, 0, 0)],
+    [(2, 4, 0, 0)] * 5,
+]
+
+
+def _check_terminal(engine, entries):
+    reqs = _traffic_requests(entries)
+    for r, (_, _, _, gap) in zip(reqs, entries):
+        engine.submit(r)
+        for _ in range(gap):
+            engine.step()
+    engine.run()
+    assert all(r.done and not r.dropped for r in reqs)
+    assert [len(r.out) for r in reqs] == [e[1] for e in entries]
+    assert engine.occupied() == 0 and engine.pending() == 0
+    assert all(s is None for s in engine._slot_req)
+
+
+@pytest.mark.parametrize("entries", GRID_TRAFFIC)
+def test_traffic_terminal_grid(engine, entries):
+    _check_terminal(engine, entries)
+
+
+@fuzzed(max_examples=10, entries=decode_traffic())
+def test_traffic_terminal_fuzzed(engine, entries):
+    """Every request reaches a terminal state with exactly ``max_new``
+    tokens (eos=-1) and slot accounting never leaks, for ANY arrival
+    pattern — including max_new=0 requests and mid-stream arrivals."""
+    _check_terminal(engine, entries)
+
+
+def _check_greedy_independent(engine, entries):
+    solo = {}
+    for i, (plen, max_new, t10, _gap) in enumerate(entries):
+        if t10 == 0 and max_new > 0:
+            solo[i] = _solo(engine, decode_prompt(plen, 17 * i), max_new)
+    reqs = _traffic_requests(entries)
+    for r, (_, _, _, gap) in zip(reqs, entries):
+        engine.submit(r)
+        for _ in range(gap):
+            engine.step()
+    engine.run()
+    for i, out in solo.items():
+        assert reqs[i].out == out
+
+
+@pytest.mark.parametrize("entries", GRID_TRAFFIC[1:])
+def test_traffic_greedy_independent_grid(engine, entries):
+    _check_greedy_independent(engine, entries)
+
+
+@fuzzed(max_examples=6, entries=decode_traffic(max_len=5))
+def test_traffic_greedy_independent_fuzzed(engine, entries):
+    """A greedy request's output is independent of whatever traffic it
+    is co-batched with — random prompts, sampling neighbors, arrival
+    gaps.  (This is the per-slot sampling fix as a property.)"""
+    _check_greedy_independent(engine, entries)
+
+
+def _check_mux_hard_never_lost(entries, budget_steps):
+    eng = _fresh_engine()
+    mux, clock = _mux(eng, budget=budget_steps * 1e-4 or 1e-12)
+    reqs = []
+    for i, (plen, max_new, t10, gap) in enumerate(entries):
+        r = Request(prompt=decode_prompt(plen, 17 * i), max_new=max_new,
+                    temperature=t10 / 10)
+        pri = "hard" if i % 2 == 0 else "best_effort"
+        mux.submit_decode(r, priority=pri,
+                          deadline=clock() + (2.0 if gap else 6.0))
+        reqs.append(r)
+        mux.poll()
+        clock.advance(1.0)
+    for _ in range(4):
+        mux.poll()
+        clock.advance(1.0)
+    mux.run()
+    for i, r in enumerate(reqs):
+        assert r.done or r.dropped
+        if i % 2 == 0:
+            assert r.done and not r.dropped
+    assert mux.pending() == 0 and eng.occupied() == 0
+
+
+@pytest.mark.parametrize("entries,budget_steps",
+                         [(GRID_TRAFFIC[1], 0), (GRID_TRAFFIC[2], 2)])
+def test_mux_hard_decode_never_lost_grid(entries, budget_steps):
+    _check_mux_hard_never_lost(entries, budget_steps)
+
+
+@fuzzed(max_examples=6, entries=decode_traffic(), budget_steps=integers(0, 3))
+def test_mux_hard_decode_never_lost_fuzzed(entries, budget_steps):
+    """Through the mux under an arbitrary (possibly zero) budget, hard
+    decode requests are never shed and always finish; best-effort is
+    only ever dropped from the queue, already-terminal either way."""
+    _check_mux_hard_never_lost(entries, budget_steps)

@@ -9,9 +9,14 @@ from repro.serve import DecodeEngine, Request
 
 
 @pytest.fixture(scope="module")
-def engine():
+def model():
     cfg = get_smoke("phi4-mini-3.8b")
-    params = T.init_params(jax.random.key(0), cfg)
+    return cfg, T.init_params(jax.random.key(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def engine(model):
+    cfg, params = model
     return DecodeEngine(cfg, params, batch=4, max_len=64, eos_id=1)
 
 
@@ -41,14 +46,16 @@ def test_engine_greedy_deterministic(engine):
 
 
 def test_engine_isolation_across_slots(engine):
-    """A request's output depends on its own prompt, not on pool mates."""
+    """A request's output depends on its own prompt, not on pool mates.
+    (run() returns requests in COMPLETION order — shorter pool mates
+    finish first under continuous batching — so track the object.)"""
     engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
     alone = engine.run()[0].out
-    engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
+    r = engine.submit(Request(prompt=[9, 8, 7, 6], max_new=5))
     engine.submit(Request(prompt=[30, 31, 32], max_new=5))
     engine.submit(Request(prompt=[40], max_new=5))
-    together = engine.run()[0].out
-    assert alone == together
+    engine.run()
+    assert alone == r.out
 
 
 def test_engine_sampled_mode(engine):
@@ -57,16 +64,30 @@ def test_engine_sampled_mode(engine):
     assert len(done[0].out) >= 1
 
 
-def test_engine_shares_core_metrics(engine):
+def test_engine_shares_core_metrics(model):
     """DecodeEngine rides the same EngineCore accounting as the solver
-    engines: pool launches and request latencies land in the snapshot."""
-    engine.reset_metrics()
+    engines — per-step launches and request latencies land in the
+    snapshot — plus the continuous-batching view: per-phase samples,
+    token/step counters and slot reuse.  A fresh engine with
+    ``eos_id=-1`` (never generated) makes the step counts exact."""
+    cfg, params = model
+    engine = DecodeEngine(cfg, params, batch=4, max_len=64, eos_id=-1)
     for i in range(6):                 # 6 requests, 4-slot pool
         engine.submit(Request(prompt=[2 + i, 3], max_new=2))
     engine.run()
-    st = engine.metrics()["decode"]
+    snap = engine.metrics()
+    st = snap["decode"]
+    # each request needs 3 SPMD steps (2 prompt feeds overlapping the
+    # first output + 1 generate); requests 5-6 reuse freed slots, so the
+    # whole batch retires in 6 steps instead of the lockstep path's 2
+    # pool generations
     assert st.jobs == 6
-    assert st.launches == 2            # two pool generations
-    assert st.lanes_dispatched == 8 and st.lanes_padded == 2
-    assert st.lane_utilization == pytest.approx(6 / 8)
+    assert st.launches == 6
+    assert st.lanes_dispatched == 24 and st.lanes_padded == 6
+    assert st.lane_utilization == pytest.approx(18 / 24)
     assert st.latency.count == 6 and st.latency.p50 >= 0.0
+    d = snap.decode
+    assert d.requests == 6 and d.tokens == 12 and d.steps == 6
+    assert d.tokens_per_step == pytest.approx(2.0)
+    assert d.slot_reuses == 2
+    assert d.insert.count == d.prefill.count == d.generate.count == 6
